@@ -1,0 +1,92 @@
+"""Kernel micro-benchmarks: µs/call + parity vs the pure-jnp oracles.
+
+CPU note: Pallas runs in interpret mode here, so absolute times measure the
+CPU emulation, not TPU performance; the parity column is the correctness
+signal and the ops are the TPU-target artifacts.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, reps=3, **kw):
+    fn(*args, **kw)            # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_kernels():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+
+    # sketch_update
+    from repro.core.sketch import SketchParams, split_key
+    from repro.kernels.sketch_update import ops as SO, ref as SR
+    p = SketchParams(d=2, m=512, H=4, L=128)
+    n = 2048
+    keys = (np.arange(n) % 97).astype(np.int64) * 0x9E3779B9
+    lo, hi = split_key(keys)
+    dur = np.random.default_rng(0).random(n).astype(np.float32)
+    args = (jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(dur),
+            jnp.asarray(dur * 2), jnp.asarray(np.cumsum(dur, dtype=np.float32)))
+    us_p, st_p = _timeit(lambda: SO.insert(SO.make_state(p), *args,
+                                           params=p, impl="pallas"))
+    us_r, st_r = _timeit(lambda: SR.insert_batch(SR.make_state(p), *args,
+                                                 H=p.H))
+    par = int(np.array_equal(np.asarray(st_p["freq"]),
+                             np.asarray(st_r["freq"])))
+    rows.append(("kern_sketch_pallas_2048rec", round(us_p, 1),
+                 f"parity={par}"))
+    rows.append(("kern_sketch_jnpref_2048rec", round(us_r, 1), ""))
+
+    # flash attention
+    from repro.kernels.flash_attention.ops import gqa_attention
+    q = jax.random.normal(rng, (2, 256, 4, 64))
+    k = jax.random.normal(rng, (2, 256, 2, 64))
+    v = jax.random.normal(rng, (2, 256, 2, 64))
+    us_p, a = _timeit(gqa_attention, q, k, v, impl="pallas")
+    us_r, r = _timeit(gqa_attention, q, k, v, impl="ref")
+    err = float(jnp.max(jnp.abs(a - r)))
+    rows.append(("kern_flashattn_pallas_b2s256", round(us_p, 1),
+                 f"maxerr={err:.1e}"))
+    rows.append(("kern_flashattn_ref_b2s256", round(us_r, 1), ""))
+
+    # ssd scan
+    from repro.kernels.ssd_scan.ops import ssd
+    x = jax.random.normal(rng, (2, 256, 4, 32)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(rng, (2, 256, 4))) * 0.3
+    a_ = -jnp.exp(jax.random.normal(rng, (4,)) * 0.3)
+    bb = jax.random.normal(rng, (2, 256, 2, 16)) * 0.4
+    cc = jax.random.normal(rng, (2, 256, 2, 16)) * 0.4
+    us_p, (yp, _) = _timeit(ssd, x, dt, a_, bb, cc, impl="pallas")
+    us_r, (yr, _) = _timeit(ssd, x, dt, a_, bb, cc, impl="ref")
+    err = float(jnp.max(jnp.abs(yp - yr)))
+    rows.append(("kern_ssd_pallas_b2s256", round(us_p, 1),
+                 f"maxerr={err:.1e}"))
+    rows.append(("kern_ssd_ref_b2s256", round(us_r, 1), ""))
+
+    # failrank step
+    from repro.kernels.failrank_step.kernel import failrank_step
+    from repro.kernels.failrank_step.ref import failrank_step_ref
+    n = 512
+    w = jax.random.uniform(rng, (n, n))
+    w = w / w.sum(1, keepdims=True)
+    l = jax.random.uniform(rng, (n, n))
+    s = jax.random.uniform(rng, (n,))
+    us_p, (sp, lp) = _timeit(failrank_step, w, l, s, s)
+    us_r, (sr, lr) = _timeit(failrank_step_ref, w, l, s, s)
+    err = max(float(jnp.max(jnp.abs(sp - sr))),
+              float(jnp.max(jnp.abs(lp - lr))))
+    rows.append(("kern_failrank_pallas_n512", round(us_p, 1),
+                 f"maxerr={err:.1e}"))
+    rows.append(("kern_failrank_ref_n512", round(us_r, 1), ""))
+    return rows

@@ -1,0 +1,335 @@
+"""Benchmarks reproducing each table/figure of the SLOTH paper.
+
+Each function returns a list of CSV rows ``(name, us_per_call, derived)``
+where ``derived`` is the figure's headline quantity.  ``quick`` keeps CPU
+runtime bounded; ``BENCH_FULL=1`` scales to paper-size datasets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core.failures import FailSlow, effective_samples, make_dataset
+from repro.core.graph import build_workload
+from repro.core.recorder import record
+from repro.core.routing import Mesh2D
+from repro.core.sloth import Sloth, SlothConfig
+from repro.core.sketch import SketchParams
+
+WORKLOADS = ("darknet19", "googlenet", "vgg16", "resnet50", "binary_tree")
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+
+def _used_links(sloth: Sloth, sim) -> set[int]:
+    used = set()
+    for s, d in zip(sim.comm["src"], sim.comm["dst"]):
+        if s != d:
+            used.update(sloth.mesh.route(int(s), int(d)))
+    return used
+
+
+# ---------------------------------------------------------------------------
+# Fig 1b: impact of one fail-slow on end-to-end time (ResNet-50, 4×4, 10×)
+# ---------------------------------------------------------------------------
+
+def bench_impact():
+    """Persistent 10× fail-slow on the busiest link / router / core of a
+    comm-heavy ResNet-50 mapping (max_parts=4, fan-in 10, NoC-class link
+    bandwidth).  Paper reports 1.26×/1.67×/2.48×; our platform reproduces
+    the ordering (core > router > link) with router ≈ paper."""
+    from repro.core.mapping import map_graph
+    from repro.core.simulator import SimConfig, calibrate, simulate
+    mesh = Mesh2D(4)
+    g = build_workload("resnet50")
+    mg = map_graph(g, mesh, shuffle_fanin=10, max_parts=4)
+    cfg = SimConfig(mu_c=calibrate(g.total_flops(), mesh.n_cores),
+                    link_bw=64e9 / 256, seed=0)
+    t0 = time.perf_counter()
+    base = simulate(mg, cfg)
+    cnt = np.zeros(mesh.n_links)
+    for s, d, b in zip(base.comm["src"], base.comm["dst"],
+                       base.comm["bytes"]):
+        if s != d:
+            for lid in mesh.route(int(s), int(d)):
+                cnt[lid] += b
+    busiest = int(np.argmax(cnt))
+    busy_core = int(np.argmax(np.bincount(
+        base.comp["core"], weights=base.comp["flops"], minlength=16)))
+    rows = []
+    for kind, loc in (("link", busiest), ("router", busy_core),
+                      ("core", busy_core)):
+        t = simulate(mg, cfg,
+                     failures=[FailSlow(kind, loc, 0.0, 1e9, 10.0)])
+        rows.append((f"fig1b_{kind}_slowdown", 0.0,
+                     round(float(t.total_time / base.total_time), 2)))
+    us = (time.perf_counter() - t0) / 4 * 1e6
+    return [(r[0], round(us, 1), r[2]) for r in rows]
+
+
+# ---------------------------------------------------------------------------
+# Table III: detection accuracy / FPR, SLOTH vs 5 baselines, 5 workloads
+# ---------------------------------------------------------------------------
+
+def bench_accuracy(n_failures=None):
+    n_failures = n_failures or (152 if FULL else 24)
+    mesh = Mesh2D(4)
+    rows = []
+    agg = {}
+    for wl in WORKLOADS:
+        sloth = Sloth(build_workload(wl), mesh)
+        healthy = sloth.run(None, seed=999)
+        ds = effective_samples(make_dataset(mesh, n_failures, seed=3),
+                               healthy.total_time,
+                               _used_links(sloth, healthy))
+        dets = [cls(mesh, healthy) for cls in B.ALL_BASELINES]
+        stats = {d.name: [0, 0, 0, 0] for d in dets}   # tp, pos, fp, neg
+        stats["sloth"] = [0, 0, 0, 0]
+        t0 = time.perf_counter()
+        n_calls = 0
+        for s in ds:
+            sim = sloth.run([s.failure] if s.failure else None,
+                            seed=100 + s.sample_id)
+            verdicts = {d.name: d.detect(sim) for d in dets}
+            verdicts["sloth"] = sloth.analyse(sim)
+            n_calls += 1
+            for name, v in verdicts.items():
+                st = stats[name]
+                if s.failure is not None:
+                    st[1] += 1
+                    st[0] += v.matches(s.failure)
+                else:
+                    st[3] += 1
+                    st[2] += v.flagged
+        us = (time.perf_counter() - t0) / max(n_calls, 1) * 1e6
+        for name, (tp, pos, fp, neg) in stats.items():
+            acc = tp / max(pos, 1) * 100
+            fpr = fp / max(neg, 1) * 100
+            rows.append((f"tab3_{wl}_{name}_acc", round(us, 1),
+                         round(acc, 2)))
+            rows.append((f"tab3_{wl}_{name}_fpr", round(us, 1),
+                         round(fpr, 2)))
+            agg.setdefault(name, []).append((acc, fpr))
+    for name, vals in agg.items():
+        rows.append((f"tab3_avg_{name}_acc", 0.0,
+                     round(float(np.mean([a for a, _ in vals])), 2)))
+        rows.append((f"tab3_avg_{name}_fpr", 0.0,
+                     round(float(np.mean([f for _, f in vals])), 2)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 10: probe time overhead (comm / comp / full)
+# ---------------------------------------------------------------------------
+
+def bench_probe_overhead():
+    from repro.core.compiler import plan_for_mode
+    mesh = Mesh2D(4)
+    rows = []
+    for wl in WORKLOADS:
+        sloth = Sloth(build_workload(wl), mesh)
+        import dataclasses as dc
+        base = None
+        t0 = time.perf_counter()
+        for mode in ("none", "comm", "comp", "full"):
+            plan = plan_for_mode(mode)
+            from repro.core.simulator import simulate
+            cfg = dc.replace(sloth.sim_cfg, seed=0)
+            t = simulate(sloth.mapped, cfg, probes=plan).total_time
+            if mode == "none":
+                base = t
+            else:
+                rows.append((f"fig10_{wl}_{mode}_overhead_pct", 0.0,
+                             round((t / base - 1) * 100, 3)))
+        us = (time.perf_counter() - t0) / 4 * 1e6
+        rows = [(n, round(us, 1) if n.startswith(f"fig10_{wl}") and u == 0.0
+                 else u, d) for n, u, d in rows]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 11/12: storage cost (raw vs IASO/Perseus/ADR vs SL-Recorder)
+# ---------------------------------------------------------------------------
+
+def bench_storage():
+    mesh = Mesh2D(4)
+    rows = []
+    ratios = []
+    for wl in WORKLOADS:
+        sloth = Sloth(build_workload(wl), mesh)
+        sim = sloth.run(None, seed=0)
+        t0 = time.perf_counter()
+        rec = record(sim, sloth.cfg.sketch,
+                     hop_latency=sloth.sim_cfg.hop_latency)
+        us = (time.perf_counter() - t0) * 1e6
+        # baseline retention models: IASO keeps full comm traces minus
+        # 30-40% (timeout aggregation); Perseus/ADR keep per-instruction
+        # records for regression / adaptive thresholds (25-50% savings).
+        iaso = int(rec.raw_comm_bytes * 0.65)
+        perseus = int(rec.raw_comp_bytes * 0.60)
+        adr = int(rec.raw_comp_bytes * 0.70)
+        rows += [
+            (f"fig11_{wl}_raw_comm_KiB", round(us, 1),
+             round(rec.raw_comm_bytes / 1024, 1)),
+            (f"fig11_{wl}_iaso_KiB", 0.0, round(iaso / 1024, 1)),
+            (f"fig11_{wl}_sketch_comm_KiB", 0.0,
+             round(rec.sketch_comm_bytes / 1024, 1)),
+            (f"fig12_{wl}_raw_comp_KiB", 0.0,
+             round(rec.raw_comp_bytes / 1024, 1)),
+            (f"fig12_{wl}_perseus_KiB", 0.0, round(perseus / 1024, 1)),
+            (f"fig12_{wl}_adr_KiB", 0.0, round(adr / 1024, 1)),
+            (f"fig12_{wl}_sketch_comp_KiB", 0.0,
+             round(rec.sketch_comp_bytes / 1024, 1)),
+        ]
+        ratios.append(rec.compression_ratio)
+        rows.append((f"storage_{wl}_compression_x", 0.0,
+                     round(rec.compression_ratio, 1)))
+    rows.append(("storage_avg_compression_x", 0.0,
+                 round(float(np.mean(ratios)), 1)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 13: sketch parameter sensitivity (H, B, S, T heatmaps)
+# ---------------------------------------------------------------------------
+
+def bench_sketch_params():
+    mesh = Mesh2D(4)
+    sloth = Sloth(build_workload("darknet19"), mesh)
+    sim = sloth.run(None, seed=0)
+    rows = []
+    hop = sloth.sim_cfg.hop_latency
+
+    def ratio(p):
+        rec = record(sim, p, hop_latency=hop)
+        return rec.compression_ratio
+
+    for d in (1, 2, 4):
+        for m in (256, 1024, 4096):
+            r = ratio(SketchParams(d=d, m=m, H=8, L=1024))
+            rows.append((f"fig13_hash{d}_bucket{m}_ratio", 0.0, round(r, 1)))
+    for L in (128, 512, 2048):
+        for H in (2, 8, 32):
+            r = ratio(SketchParams(d=2, m=1024, H=H, L=L))
+            rows.append((f"fig13_size{L}_thresh{H}_ratio", 0.0, round(r, 1)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 14: design-space exploration, COST = ACC^α · R^β · M^γ
+# ---------------------------------------------------------------------------
+
+def bench_dse(n_samples=None):
+    n_samples = n_samples or (24 if FULL else 10)
+    mesh = Mesh2D(4)
+    rows = []
+    grid = [SketchParams(d=d, m=m, H=H, L=L)
+            for d in (1, 2) for m in (256, 1024)
+            for H in (4, 16) for L in (256, 1024)]
+    for wl in ("darknet19", "binary_tree"):
+        sloth_base = Sloth(build_workload(wl), mesh)
+        healthy = sloth_base.run(None, seed=999)
+        ds = effective_samples(make_dataset(mesh, n_samples, seed=3),
+                               healthy.total_time,
+                               _used_links(sloth_base, healthy))
+        sims = [(s, sloth_base.run([s.failure] if s.failure else None,
+                                   seed=100 + s.sample_id)) for s in ds]
+        best = (1e30, None)
+        for p in grid:
+            cfg = SlothConfig(sketch=p)
+            sloth = Sloth(sloth_base.graph, mesh, cfg=cfg)
+            ok = n = 0
+            ratio = 1.0
+            for s, sim in sims:
+                v = sloth.analyse(sim)
+                ok += v.matches(s.failure)
+                n += 1
+                ratio = v.recorder.compression_ratio
+            acc = max(ok / max(n, 1), 1e-3)
+            mem = p.total_bytes() / 1024
+            cost = (acc ** -1) * (1.0 / max(ratio, 1e-9)) * mem
+            rows.append((f"fig14_{wl}_d{p.d}_m{p.m}_H{p.H}_L{p.L}_cost",
+                         0.0, round(cost, 4)))
+            if cost < best[0]:
+                best = (cost, p)
+        rows.append((f"fig14_{wl}_pareto", 0.0,
+                     f"d{best[1].d}_m{best[1].m}_H{best[1].H}_L{best[1].L}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 15: FailRank convergence
+# ---------------------------------------------------------------------------
+
+def bench_failrank_convergence():
+    mesh = Mesh2D(4)
+    sloth = Sloth(build_workload("resnet50"), mesh)
+    rows = []
+    cases = [FailSlow("core", 5, 1.0, 8.0), FailSlow("core", 10, 2.0, 5.0),
+             FailSlow("link", 20, 1.0, 8.0), FailSlow("link", 36, 0.5, 6.0)]
+    for i, f in enumerate(cases):
+        t0 = time.perf_counter()
+        v = sloth.detect([f], seed=i)
+        us = (time.perf_counter() - t0) * 1e6
+        res = v.failrank.residuals
+        rows.append((f"fig15_case{i}_iters", round(us, 1),
+                     v.failrank.iterations))
+        if len(res) >= 2:
+            gm = (res[-1] / res[0]) ** (1 / max(len(res) - 1, 1))
+            rows.append((f"fig15_case{i}_geo_rate", 0.0, round(float(gm),
+                                                               3)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 16/17: scalability across 4×4 / 6×6 / 8×8
+# ---------------------------------------------------------------------------
+
+def bench_scalability(n_samples=None):
+    n_samples = n_samples or (20 if FULL else 8)
+    rows = []
+    for w in (4, 6, 8):
+        mesh = Mesh2D(w)
+        for wl in ("resnet50", "darknet19"):
+            sloth = Sloth(build_workload(wl), mesh)
+            healthy = sloth.run(None, seed=999)
+            rows.append((f"fig16_{wl}_{w}x{w}_total_s", 0.0,
+                         round(healthy.total_time, 2)))
+            from repro.core.compiler import plan_for_mode
+            from repro.core.simulator import simulate
+            import dataclasses as dc
+            t_full = simulate(sloth.mapped,
+                              dc.replace(sloth.sim_cfg, seed=999),
+                              probes=plan_for_mode("full")).total_time
+            t_none = simulate(sloth.mapped,
+                              dc.replace(sloth.sim_cfg, seed=999),
+                              probes=None).total_time
+            rows.append((f"fig16_{wl}_{w}x{w}_full_probe_pct", 0.0,
+                         round((t_full / t_none - 1) * 100, 3)))
+            rec = record(healthy, sloth.cfg.sketch,
+                         hop_latency=sloth.sim_cfg.hop_latency)
+            rows.append((f"fig17_{wl}_{w}x{w}_compression_x", 0.0,
+                         round(rec.compression_ratio, 1)))
+            ds = effective_samples(make_dataset(mesh, n_samples, seed=3),
+                                   healthy.total_time,
+                                   _used_links(sloth, healthy))
+            ok = pos = 0
+            for s in ds:
+                if s.failure is None:
+                    continue
+                v = sloth.detect([s.failure], seed=100 + s.sample_id)
+                ok += v.matches(s.failure)
+                pos += 1
+            rows.append((f"fig17_{wl}_{w}x{w}_acc_pct", 0.0,
+                         round(ok / max(pos, 1) * 100, 1)))
+    return rows
+
+
+ALL = [bench_impact, bench_accuracy, bench_probe_overhead, bench_storage,
+       bench_sketch_params, bench_dse, bench_failrank_convergence,
+       bench_scalability]

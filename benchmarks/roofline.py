@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run results (reads dryrun_results.json)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get(
+    "DRYRUN_RESULTS",
+    os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json"))
+
+
+def bench_roofline():
+    rows = []
+    if not os.path.exists(RESULTS):
+        return [("roofline_missing", 0.0, "run repro.launch.dryrun --all")]
+    data = json.load(open(RESULTS))
+    n_ok = n_skip = n_err = 0
+    for key in sorted(data):
+        rec = data[key]
+        if rec["status"] == "skipped":
+            n_skip += 1
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            rows.append((f"dryrun_{key}", 0.0, "ERROR"))
+            continue
+        n_ok += 1
+        if "|single" in key and "|" not in key.split("|single")[-1]:
+            r = rec["roofline"]
+            dom = r["dominant"].replace("_s", "")
+            rows.append((
+                f"roofline_{rec['arch']}_{rec['shape']}", 0.0,
+                f"dom={dom};c={r['compute_s']:.2e};m={r['memory_s']:.2e};"
+                f"n={r['collective_s']:.2e};"
+                f"useful={r['useful_flops_frac']:.3f};"
+                f"GiB={rec['per_device']['peak_bytes']/2**30:.2f}"))
+    rows.append(("dryrun_cells", 0.0,
+                 f"ok={n_ok};skipped={n_skip};error={n_err}"))
+    return rows

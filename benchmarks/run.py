@@ -1,0 +1,40 @@
+"""Benchmark harness: one bench per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  Env: BENCH_FULL=1 for paper-scale
+datasets; BENCH_ONLY=<substring> to run a subset.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.kernels import bench_kernels
+    from benchmarks.paper import ALL as PAPER_BENCHES
+    from benchmarks.roofline import bench_roofline
+
+    benches = list(PAPER_BENCHES) + [bench_kernels, bench_roofline]
+    only = os.environ.get("BENCH_ONLY", "")
+    print("name,us_per_call,derived")
+    for bench in benches:
+        if only and only not in bench.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = bench()
+        except Exception as e:  # keep the harness running
+            print(f"{bench.__name__},0,EXCEPTION:{type(e).__name__}:{e}")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us},{derived}")
+        print(f"#{bench.__name__}_wall_s,{time.time() - t0:.1f},")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Sharded, atomic checkpointing with elastic reshard-on-load.
+
+Layout:  <dir>/step_<N>/
+            manifest.json      — step, pytree structure, shapes/dtypes,
+                                 data-pipeline state, mesh shape at save
+            arrays.npz         — flattened leaves (single-host container;
+                                 a multi-host deployment writes one shard
+                                 file per host: shard_<i>.npz)
+Writes go to ``<dir>/.tmp_step_<N>`` and are renamed at the end, so a crash
+mid-write never corrupts the latest checkpoint.  Loading replaces device
+placement entirely (elastic restart: the new mesh may differ from the mesh
+at save; arrays are re-sharded via ``jax.device_put`` with the new specs).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+         keep: int = 3):
+    leaves, treedef = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "shapes": [list(np.shape(x)) for x in leaves],
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)              # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_"):
+            try:
+                out.append(int(d.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, tree_like, shardings=None):
+    """Load ``step`` into the structure of ``tree_like``.  ``shardings``
+    (same pytree of NamedSharding) re-shards for the *current* mesh —
+    elastic restart onto a different mesh shape just passes new specs."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = _flatten(tree_like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        "checkpoint structure mismatch"
+    new_leaves = []
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_like))
+    for i, (like, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        arr = arr.astype(np.asarray(like).dtype) if hasattr(like, "dtype") \
+            else arr
+        if sh is not None:
+            new_leaves.append(jax.device_put(arr, sh))
+        else:
+            new_leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), \
+        manifest["extra"]

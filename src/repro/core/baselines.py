@@ -1,0 +1,288 @@
+"""Five baseline fail-slow detectors (paper §IV-A), adapted to the
+many-core accelerator domain as in-house implementations.  All consume the
+same raw trace infrastructure (SimResult) as SLOTH for a fair comparison.
+
+  Thres    — static 2× threshold over profiled nominal latency
+  Mscope   — Microscope: dependency DAG + random-walk root-cause scoring
+  IASO     — peer timeout signals → AIMD scores → DBSCAN outlier cluster
+  Perseus  — polynomial regression on latency-vs-throughput, p99.9 outliers
+  ADR      — sliding windows, adaptive thresholds from history percentiles
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .failures import FailSlow
+from .routing import Mesh2D
+from .simulator import SimResult
+
+
+@dataclasses.dataclass
+class BaselineVerdict:
+    flagged: bool
+    kind: str | None
+    location: int | None
+    score: float
+
+    def matches(self, failure: FailSlow | None) -> bool:
+        if failure is None:
+            return not self.flagged
+        return (self.flagged and self.kind == failure.kind
+                and self.location == failure.location)
+
+
+def _per_core_rates(sim: SimResult):
+    """mean FLOPs/s per (core, stage) and per core."""
+    comp = sim.comp
+    dur = np.maximum(comp["t_end"] - comp["t_start"], 1e-12)
+    rate = comp["flops"] / dur
+    return comp["core"], comp["stage"], rate, dur
+
+
+def _per_link_latency(sim: SimResult, mesh: Mesh2D):
+    comm = sim.comm
+    lat = {}
+    for s, d, svc in zip(comm["src"], comm["dst"], comm["service"]):
+        if s == d:
+            continue
+        for lid in mesh.route(int(s), int(d)):
+            lat.setdefault(lid, []).append(svc / max(1, len(
+                mesh.route(int(s), int(d)))))
+    return lat
+
+
+# ---------------------------------------------------------------------------
+# (1) Threshold filtering
+# ---------------------------------------------------------------------------
+
+class Thres:
+    """Flags any component whose latency exceeds 2× the profiled nominal."""
+
+    name = "thres"
+
+    def __init__(self, mesh: Mesh2D, profile: SimResult):
+        cores, stages, rate, _ = _per_core_rates(profile)
+        self.nominal = {}
+        for c, s, r in zip(cores, stages, rate):
+            self.nominal.setdefault((int(c), int(s)), []).append(r)
+        self.nominal = {k: float(np.median(v))
+                        for k, v in self.nominal.items()}
+        link_lat = _per_link_latency(profile, mesh)
+        self.link_nominal = {k: float(np.median(v))
+                             for k, v in link_lat.items()}
+        self.mesh = mesh
+
+    def detect(self, sim: SimResult) -> BaselineVerdict:
+        cores, stages, rate, _ = _per_core_rates(sim)
+        worst, where = 1.0, None
+        for c, s, r in zip(cores, stages, rate):
+            nom = self.nominal.get((int(c), int(s)))
+            if not nom or r <= 0:
+                continue
+            slow = nom / r
+            if slow > worst:
+                worst, where = slow, ("core", int(c))
+        for lid, lats in _per_link_latency(sim, self.mesh).items():
+            nom = self.link_nominal.get(lid)
+            if not nom:
+                continue
+            slow = float(np.median(lats)) / nom
+            if slow > worst:
+                worst, where = slow, ("link", int(lid))
+        if worst >= 2.0 and where:
+            return BaselineVerdict(True, where[0], where[1], worst)
+        return BaselineVerdict(False, None, None, worst)
+
+
+# ---------------------------------------------------------------------------
+# (2) Microscope: dependency DAG + random walk
+# ---------------------------------------------------------------------------
+
+class Mscope:
+    name = "mscope"
+
+    def __init__(self, mesh: Mesh2D, profile: SimResult):
+        self.mesh = mesh
+        cores, stages, rate, _ = _per_core_rates(profile)
+        self.nominal = {}
+        for c, s, r in zip(cores, stages, rate):
+            self.nominal.setdefault(int(c), []).append(r)
+        self.nominal = {k: float(np.median(v))
+                        for k, v in self.nominal.items()}
+
+    def detect(self, sim: SimResult, walks: int = 200, seed: int = 0)\
+            -> BaselineVerdict:
+        rng = np.random.default_rng(seed)
+        cores, stages, rate, _ = _per_core_rates(sim)
+        anomaly = np.zeros(self.mesh.n_cores)
+        for c, r in zip(cores, rate):
+            nom = self.nominal.get(int(c), 0)
+            if nom > 0 and r > 0:
+                anomaly[int(c)] = max(anomaly[int(c)], nom / r - 1.0)
+        # service dependency graph: consumer → producer edges weighted by
+        # traffic (we walk *backwards* towards root causes)
+        comm = sim.comm
+        w = {}
+        for s, d, b in zip(comm["src"], comm["dst"], comm["bytes"]):
+            if s != d:
+                w[(int(d), int(s))] = w.get((int(d), int(s)), 0.0) + b
+        nbr = {}
+        for (d, s), b in w.items():
+            nbr.setdefault(d, []).append((s, b))
+        visits = np.zeros(self.mesh.n_cores)
+        anomalous = np.nonzero(anomaly > 0.5)[0]
+        if len(anomalous) == 0:
+            return BaselineVerdict(False, None, None, 0.0)
+        for _ in range(walks):
+            node = int(rng.choice(anomalous))
+            for _ in range(8):
+                visits[node] += anomaly[node] + 0.1
+                opts = nbr.get(node)
+                if not opts or rng.random() < 0.2:
+                    break
+                probs = np.array([b * (1 + anomaly[s]) for s, b in opts])
+                probs /= probs.sum()
+                node = int(opts[rng.choice(len(opts), p=probs)][0])
+        loc = int(np.argmax(visits))
+        return BaselineVerdict(True, "core", loc, float(visits[loc]))
+
+
+# ---------------------------------------------------------------------------
+# (3) IASO: timeout signals → AIMD score → DBSCAN
+# ---------------------------------------------------------------------------
+
+def _dbscan_1d(x: np.ndarray, eps: float, min_pts: int = 3) -> np.ndarray:
+    """1-D DBSCAN; returns cluster labels (-1 = noise)."""
+    order = np.argsort(x)
+    labels = np.full(len(x), -1)
+    cid = -1
+    prev = None
+    for i in order:
+        if prev is not None and x[i] - x[prev] <= eps:
+            labels[i] = labels[prev] if labels[prev] >= 0 else cid
+        else:
+            cid += 1
+        if labels[i] < 0:
+            labels[i] = cid
+        prev = i
+    # enforce min_pts: clusters smaller than min_pts become noise
+    for c in np.unique(labels):
+        if (labels == c).sum() < min_pts:
+            labels[labels == c] = -1
+    return labels
+
+
+class IASO:
+    name = "iaso"
+
+    def __init__(self, mesh: Mesh2D, profile: SimResult):
+        self.mesh = mesh
+        cores, stages, rate, dur = _per_core_rates(profile)
+        self.expected = {}
+        for c, s, d in zip(cores, stages, dur):
+            self.expected.setdefault((int(c), int(s)), []).append(d)
+        self.expected = {k: float(np.median(v)) * 2.0
+                         for k, v in self.expected.items()}
+
+    def detect(self, sim: SimResult) -> BaselineVerdict:
+        cores, stages, rate, dur = _per_core_rates(sim)
+        score = np.zeros(self.mesh.n_cores)
+        order = np.argsort(sim.comp["t_start"])
+        for i in order:
+            c, s, d = int(cores[i]), int(stages[i]), float(dur[i])
+            lim = self.expected.get((c, s))
+            if lim is None:
+                continue
+            if d > lim:
+                score[c] += 1.0          # additive increase on timeout
+            else:
+                score[c] *= 0.7          # multiplicative decrease
+        labels = _dbscan_1d(score, eps=max(score.std(), 1e-9) * 0.5)
+        # outliers = cores not in the majority cluster with high score
+        if len(np.unique(labels[labels >= 0])) == 0:
+            return BaselineVerdict(False, None, None, 0.0)
+        major = np.bincount(labels[labels >= 0]).argmax()
+        cand = [(score[i], i) for i in range(len(score))
+                if labels[i] != major and score[i] > score.mean() + 2]
+        if not cand:
+            return BaselineVerdict(False, None, None, float(score.max()))
+        sc, loc = max(cand)
+        return BaselineVerdict(True, "core", int(loc), float(sc))
+
+
+# ---------------------------------------------------------------------------
+# (4) Perseus: regression on latency-vs-throughput
+# ---------------------------------------------------------------------------
+
+class Perseus:
+    name = "perseus"
+
+    def __init__(self, mesh: Mesh2D, profile: SimResult):
+        self.mesh = mesh
+        cores, stages, rate, dur = _per_core_rates(profile)
+        x = np.log(np.maximum(profile.comp["flops"], 1.0))
+        y = np.log(np.maximum(dur, 1e-12))
+        self.poly = np.polyfit(x, y, 2)
+        resid = y - np.polyval(self.poly, x)
+        self.p999 = float(np.quantile(resid, 0.999))
+
+    def detect(self, sim: SimResult) -> BaselineVerdict:
+        cores = sim.comp["core"]
+        x = np.log(np.maximum(sim.comp["flops"], 1.0))
+        y = np.log(np.maximum(sim.comp["t_end"] - sim.comp["t_start"],
+                              1e-12))
+        resid = y - np.polyval(self.poly, x)
+        out = resid > self.p999
+        if not out.any():
+            return BaselineVerdict(False, None, None,
+                                   float(resid.max() - self.p999))
+        counts = np.bincount(cores[out], minlength=self.mesh.n_cores)
+        loc = int(np.argmax(counts))
+        return BaselineVerdict(True, "core", loc, float(counts[loc]))
+
+
+# ---------------------------------------------------------------------------
+# (5) ADR: sliding windows with adaptive thresholds
+# ---------------------------------------------------------------------------
+
+class ADR:
+    name = "adr"
+
+    def __init__(self, mesh: Mesh2D, profile: SimResult):
+        self.mesh = mesh
+
+    def detect(self, sim: SimResult, n_windows: int = 8) -> BaselineVerdict:
+        cores, stages, rate, dur = _per_core_rates(sim)
+        t_mid = (sim.comp["t_start"] + sim.comp["t_end"]) / 2
+        total = max(sim.total_time, 1e-9)
+        win = np.clip((t_mid / total * n_windows).astype(int), 0,
+                      n_windows - 1)
+        worst, where = 0.0, None
+        for c in range(self.mesh.n_cores):
+            sel = cores == c
+            if sel.sum() < 2 * n_windows:
+                continue
+            r = rate[sel]
+            w = win[sel]
+            hist = []
+            for k in range(n_windows):
+                vals = r[w == k]
+                if len(vals) == 0:
+                    continue
+                cur = float(np.median(vals))
+                if len(hist) >= 2:
+                    thr = np.quantile(hist, 0.1)   # adaptive threshold
+                    if cur < thr:
+                        slow = thr / max(cur, 1e-12)
+                        if slow > worst:
+                            worst, where = slow, c
+                hist.append(cur)
+        if where is not None and worst > 1.5:
+            return BaselineVerdict(True, "core", int(where), worst)
+        return BaselineVerdict(False, None, None, worst)
+
+
+ALL_BASELINES = [Thres, Mscope, IASO, Perseus, ADR]

@@ -1,0 +1,90 @@
+"""Recorder driver: simulator traces → probes → Fail-Slow Sketch patterns.
+
+Separate sketches are kept for computation and communication traces (the
+paper reports their storage separately, Figs 11/12).  Instruction expansion
+is fed to the sketch as exact run-length runs (`insert_run`) for speed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import probes as P
+from .sketch import FailSlowSketch, Pattern, SketchParams
+from .simulator import SimResult
+
+
+@dataclasses.dataclass
+class RecorderOutput:
+    comp_patterns: list[Pattern]
+    comm_patterns: list[Pattern]
+    raw_comp_bytes: int
+    raw_comm_bytes: int
+    sketch_comp_bytes: int
+    sketch_comm_bytes: int
+    n_comp_records: int
+    n_comm_records: int
+
+    @property
+    def raw_bytes(self) -> int:
+        return self.raw_comp_bytes + self.raw_comm_bytes
+
+    @property
+    def sketch_bytes(self) -> int:
+        return self.sketch_comp_bytes + self.sketch_comm_bytes
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.raw_bytes / max(self.sketch_bytes, 1)
+
+
+def record(sim: SimResult, params: SketchParams,
+           comm_params: SketchParams | None = None,
+           instr_per_task: int = 64,
+           packet_bytes: int = P.PACKET_BYTES,
+           max_packets: int = 64,
+           hop_latency: float = 50e-9) -> RecorderOutput:
+    comm_params = comm_params or params
+
+    comp_sketch = FailSlowSketch(params)
+    comp = sim.comp
+    n_comp = 0
+    if len(comp["core"]):
+        keys = P.comp_pattern_keys(comp)
+        r = instr_per_task
+        durs = (comp["t_end"] - comp["t_start"]) / r
+        comp_sketch.insert_runs(keys, np.full(len(keys), r), durs,
+                                comp["flops"] / r, comp["t_start"], durs)
+        n_comp = len(keys) * r
+
+    comm_sketch = FailSlowSketch(comm_params)
+    comm = sim.comm
+    n_comm = 0
+    if len(comm["src"]):
+        keys = P.comm_pattern_keys(comm)
+        pk = np.clip(np.ceil(comm["bytes"] / packet_bytes).astype(np.int64),
+                     1, max_packets)
+        # per-packet duration uses the queue-free service time: the min over
+        # a pattern's packets estimates link bandwidth, not congestion (the
+        # detector's EM needs the former; backpressure is a symptom).  Each
+        # packet pays the full per-hop router latency (store-and-forward),
+        # while the serialisation time divides across packets.
+        lat = comm["hops"] * hop_latency
+        per = np.maximum(comm["service"] - lat, 0.0) / pk + lat
+        wall = (comm["t_arrive"] - comm["t_depart"]) / pk
+        comm_sketch.insert_runs(keys, pk, per, comm["bytes"] / pk,
+                                comm["t_depart"], wall)
+        n_comm = int(pk.sum())
+
+    return RecorderOutput(
+        comp_patterns=comp_sketch.patterns(),
+        comm_patterns=comm_sketch.patterns(),
+        raw_comp_bytes=n_comp * P.COMP_RECORD_BYTES,
+        raw_comm_bytes=n_comm * P.COMM_RECORD_BYTES,
+        sketch_comp_bytes=comp_sketch.compressed_bytes(),
+        sketch_comm_bytes=comm_sketch.compressed_bytes(),
+        n_comp_records=n_comp,
+        n_comm_records=n_comm,
+    )

@@ -1,0 +1,81 @@
+"""Deterministic XY (dimension-ordered) routing on a 2D mesh.
+
+Link indexing is shared by the simulator, the link-level EM detector and the
+MCG builder, so that a physical link has one identity everywhere.  Links are
+directed: ``(u, v)`` with u, v adjacent core ids.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class Mesh2D:
+    """W×H core mesh with directed links between 4-neighbours."""
+
+    def __init__(self, width: int, height: int | None = None):
+        self.width = int(width)
+        self.height = int(height if height is not None else width)
+        self.n_cores = self.width * self.height
+        self._link_ids: dict[tuple[int, int], int] = {}
+        links = []
+        for y in range(self.height):
+            for x in range(self.width):
+                u = self.core_id(x, y)
+                for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                    nx_, ny_ = x + dx, y + dy
+                    if 0 <= nx_ < self.width and 0 <= ny_ < self.height:
+                        v = self.core_id(nx_, ny_)
+                        self._link_ids[(u, v)] = len(links)
+                        links.append((u, v))
+        self.links: list[tuple[int, int]] = links
+        self.n_links = len(links)
+
+    # -- coordinates -------------------------------------------------------
+    def core_id(self, x: int, y: int) -> int:
+        return y * self.width + x
+
+    def coords(self, core: int) -> tuple[int, int]:
+        return core % self.width, core // self.width
+
+    def link_id(self, u: int, v: int) -> int:
+        return self._link_ids[(u, v)]
+
+    def links_of_router(self, core: int) -> list[int]:
+        """All links adjacent to ``core``'s router (in and out)."""
+        return [lid for lid, (u, v) in enumerate(self.links)
+                if u == core or v == core]
+
+    # -- routing -----------------------------------------------------------
+    def route(self, src: int, dst: int) -> list[int]:
+        """XY route: walk X first, then Y.  Returns the link-id path."""
+        if src == dst:
+            return []
+        x0, y0 = self.coords(src)
+        x1, y1 = self.coords(dst)
+        path = []
+        x, y = x0, y0
+        while x != x1:
+            nx_ = x + (1 if x1 > x else -1)
+            path.append(self.link_id(self.core_id(x, y),
+                                     self.core_id(nx_, y)))
+            x = nx_
+        while y != y1:
+            ny_ = y + (1 if y1 > y else -1)
+            path.append(self.link_id(self.core_id(x, y),
+                                     self.core_id(x, ny_)))
+            y = ny_
+        return path
+
+    def hops(self, src: int, dst: int) -> int:
+        x0, y0 = self.coords(src)
+        x1, y1 = self.coords(dst)
+        return abs(x1 - x0) + abs(y1 - y0)
+
+    def path_matrix(self, pairs: list[tuple[int, int]]) -> np.ndarray:
+        """A[e, l] = 1 if event e's route traverses link l (EM's A matrix)."""
+        A = np.zeros((len(pairs), self.n_links), dtype=np.float64)
+        for i, (s, d) in enumerate(pairs):
+            for lid in self.route(s, d):
+                A[i, lid] = 1.0
+        return A

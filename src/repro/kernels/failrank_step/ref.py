@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused FailRank step (dense form)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def failrank_step_ref(w, l, s, s0, *, lam=0.55, alpha=0.1, beta=0.3,
+                      gamma=0.6):
+    s_new = (1.0 - lam) * s0 + lam * (w.T @ s)
+    l_new = alpha * w + beta * s[:, None] + gamma * l
+    return s_new, l_new

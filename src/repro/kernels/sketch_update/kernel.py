@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: batched Fail-Slow Sketch insertion.
+
+TPU mapping of the paper's hot path (every probe record flows through
+Stage-1): the d×m bucket tables and the Stage-2 pattern list are pinned in
+VMEM for the whole call (they are the monitor's "on-chip SRAM"), trace
+records stream HBM→VMEM in blocks via the grid, and the sequential grid
+preserves Algorithm 1's insertion-order semantics.  The per-record update
+is scalar on the tables (d dynamic bucket probes, unrolled) and vector on
+the Stage-2 list (compare/argmin over L lanes on the VPU).
+
+State tensors are passed as inputs and aliased to the outputs
+(``input_output_aliases``), so the tables persist across grid steps without
+ever leaving VMEM.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ...core.sketch import HASH_A1, HASH_A2, HASH_B, SketchParams
+
+_I32MAX = np.int32(np.iinfo(np.int32).max)
+_BIG = jnp.float32(3.4e38)
+
+_STATE_KEYS = ("keys_lo", "keys_hi", "valid", "freq",
+               "s2_lo", "s2_hi", "s2_valid", "s2_count",
+               "s2_sum", "s2_sumsq", "s2_val",
+               "s2_tmin", "s2_tmax", "s2_min", "s2_arrival", "counter")
+
+
+def _hash_scalar(lo, hi, table: int, m: int):
+    a1 = jnp.int32(np.uint32(HASH_A1[table] & 0xFFFFFFFF).view(np.int32))
+    a2 = jnp.int32(np.uint32(HASH_A2[table] & 0xFFFFFFFF).view(np.int32))
+    b = jnp.int32(np.uint32(HASH_B[table] & 0xFFFFFFFF).view(np.int32))
+    x = a1 * lo + a2 * hi + b
+    x = x ^ ((x >> 16) & 0xFFFF)
+    x = x * jnp.int32(0x45D9F3B)
+    x = x ^ ((x >> 13) & 0x7FFFF)
+    x = x & jnp.int32(0x7FFFFFFF)
+    return x % m
+
+
+def _kernel(lo_ref, hi_ref, dur_ref, val_ref, t_ref, act_ref,
+            *state_refs,
+            d: int, m: int, H: int, L: int, block: int):
+    # state arrives twice (inputs, then aliased outputs); operate on the
+    # output refs — aliasing makes them carry the live state.
+    (klo, khi, vld, frq,
+     s2lo, s2hi, s2v, s2c, s2s, s2q, s2val, s2tmin, s2tmax, s2min,
+     s2arr, counter) = state_refs[len(state_refs) // 2:]
+
+    def body(k, _):
+        lo = lo_ref[k]
+        hi = hi_ref[k]
+        dur = dur_ref[k]
+        val = val_ref[k]
+        t = t_ref[k]
+        active = act_ref[k] == 1
+
+        promoted = jnp.bool_(False)
+        for i in range(d):                      # unrolled: d is small
+            idx = _hash_scalar(lo, hi, i, m)
+            bk_lo = klo[i, idx]
+            bk_hi = khi[i, idx]
+            bk_v = vld[i, idx]
+            bk_f = frq[i, idx]
+            match = (bk_v == 1) & (bk_lo == lo) & (bk_hi == hi)
+            empty = bk_v == 0
+            newf = jnp.where(match, bk_f + 1,
+                             jnp.where(empty, 1, bk_f - 1))
+            newv = jnp.where(match | empty, 1,
+                             (newf > 0).astype(jnp.int32))
+            newf = jnp.where((~match) & (~empty) & (newf <= 0), 0, newf)
+            klo[i, idx] = jnp.where(active & empty, lo, bk_lo)
+            khi[i, idx] = jnp.where(active & empty, hi, bk_hi)
+            vld[i, idx] = jnp.where(active, newv, bk_v)
+            frq[i, idx] = jnp.where(active, newf, bk_f)
+            promoted |= (match | empty) & (newf >= H)
+        promoted &= active
+
+        # ---- Stage-2 (vector over L) ----------------------------------
+        v = s2v[:]
+        s2_match = (v == 1) & (s2lo[:] == lo) & (s2hi[:] == hi)
+        exists = jnp.any(s2_match)
+        j_upd = jnp.argmax(s2_match)
+        free = v == 0
+        any_free = jnp.any(free)
+        j_free = jnp.argmax(free)
+        j_evict = jnp.argmin(jnp.where(v == 1, s2arr[:], _I32MAX))
+        j = jnp.where(exists, j_upd, jnp.where(any_free, j_free, j_evict))
+
+        def put(ref, on_upd, on_new):
+            old = ref[j]
+            ref[j] = jnp.where(promoted,
+                               jnp.where(exists, on_upd, on_new), old)
+
+        cnt = s2c[j]
+        put(s2lo, s2lo[j], lo)
+        put(s2hi, s2hi[j], hi)
+        put(s2v, 1, 1)
+        put(s2c, cnt + 1, 1)
+        put(s2s, s2s[j] + dur, dur)
+        put(s2q, s2q[j] + dur * dur, dur * dur)
+        put(s2val, s2val[j] + val, val)
+        put(s2tmin, jnp.minimum(s2tmin[j], t), t)
+        put(s2tmax, jnp.maximum(s2tmax[j], t + dur), t + dur)
+        put(s2min, jnp.minimum(s2min[j], dur), dur)
+        put(s2arr, s2arr[j], counter[0])
+        counter[0] = counter[0] + jnp.where(promoted & ~exists, 1, 0)\
+            .astype(jnp.int32)
+        return ()
+
+    jax.lax.fori_loop(0, block, body, ())
+
+
+@partial(jax.jit, static_argnames=("params", "block", "interpret"))
+def sketch_insert(state: dict, lo, hi, dur, val, t, *,
+                  params: SketchParams, block: int = 256,
+                  interpret: bool = True):
+    """Insert a batch of records into the sketch state via the Pallas
+    kernel.  State layout matches ``ref.make_state``."""
+    n = lo.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    act = jnp.ones((n,), jnp.int32)
+    if pad:
+        z32 = jnp.zeros((pad,), jnp.int32)
+        zf = jnp.zeros((pad,), jnp.float32)
+        lo = jnp.concatenate([lo.astype(jnp.int32), z32])
+        hi = jnp.concatenate([hi.astype(jnp.int32), z32])
+        dur = jnp.concatenate([dur.astype(jnp.float32), zf])
+        val = jnp.concatenate([val.astype(jnp.float32), zf])
+        t = jnp.concatenate([t.astype(jnp.float32), zf])
+        act = jnp.concatenate([act, z32])
+    else:
+        lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
+        dur, val, t = (dur.astype(jnp.float32), val.astype(jnp.float32),
+                       t.astype(jnp.float32))
+
+    p = params
+    trace_spec = pl.BlockSpec((block,), lambda i: (i,))
+    tbl_spec = pl.BlockSpec((p.d, p.m), lambda i: (0, 0))
+    vec_spec = pl.BlockSpec((p.L,), lambda i: (0,))
+    one_spec = pl.BlockSpec((1,), lambda i: (0,))
+    state_specs = [tbl_spec] * 4 + [vec_spec] * 11 + [one_spec]
+
+    state_in = [state[k] if k != "counter" else state[k].reshape(1)
+                for k in _STATE_KEYS]
+    out_shapes = [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in state_in]
+    n_trace = 6
+
+    out = pl.pallas_call(
+        partial(_kernel, d=p.d, m=p.m, H=p.H, L=p.L, block=block),
+        grid=(nb,),
+        in_specs=[trace_spec] * n_trace + state_specs,
+        out_specs=state_specs,
+        out_shape=out_shapes,
+        input_output_aliases={n_trace + i: i
+                              for i in range(len(state_in))},
+        interpret=interpret,
+    )(lo, hi, dur, val, t, act, *state_in)
+    new_state = dict(zip(_STATE_KEYS, out))
+    new_state["counter"] = new_state["counter"].reshape(())
+    return new_state

@@ -1,0 +1,47 @@
+"""Jitted public API for the sketch-update kernel.
+
+``insert(state, traces, impl=...)`` dispatches between the Pallas kernel
+(TPU target; ``interpret=True`` on CPU) and the pure-jnp oracle.
+``patterns(state)`` decodes Stage-2 into the same Pattern records the
+numpy reference produces.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.sketch import Pattern, SketchParams
+from . import kernel as K
+from . import ref as R
+
+
+def make_state(params: SketchParams):
+    return R.make_state(params)
+
+
+def insert(state, lo, hi, dur, val, t, *, params: SketchParams,
+           impl: str = "pallas", interpret: bool = True, block: int = 256):
+    if impl == "pallas":
+        return K.sketch_insert(state, lo, hi, dur, val, t, params=params,
+                               block=block, interpret=interpret)
+    return R.insert_batch(state, lo, hi, dur, val, t, H=params.H)
+
+
+def patterns(state) -> list[Pattern]:
+    out = []
+    valid = np.asarray(state["s2_valid"])
+    for j in np.nonzero(valid)[0]:
+        key = int(np.asarray(state["s2_lo"][j])) \
+            + (int(np.asarray(state["s2_hi"][j])) << 31)
+        out.append(Pattern(
+            key=key,
+            count=int(state["s2_count"][j]),
+            sum_dur=float(state["s2_sum"][j]),
+            sum_sq_dur=float(state["s2_sumsq"][j]),
+            sum_val=float(state["s2_val"][j]),
+            t_first=float(state["s2_tmin"][j]),
+            t_last=float(state["s2_tmax"][j]),
+            arrival=int(state["s2_arrival"][j]),
+            min_dur=float(state["s2_min"][j]),
+        ))
+    return sorted(out, key=lambda p: p.arrival)

@@ -1,0 +1,146 @@
+"""Pure-jnp oracle for the Fail-Slow Sketch batched insertion.
+
+Functionally identical to ``repro.core.sketch.FailSlowSketch`` (the numpy
+Algorithm-1 reference): one ``lax.scan`` step per trace record.  The Pallas
+kernel must match this bit-for-bit on integer state and to float tolerance
+on the statistics.
+
+State layout (arrays; L = Stage-2 capacity, d×m = Stage-1 tables):
+  keys_lo/keys_hi/valid/freq        [d, m]  int32
+  s2_lo/s2_hi/s2_valid/s2_count     [L]     int32
+  s2_sum/s2_sumsq/s2_val            [L]     f32
+  s2_tmin/s2_tmax/s2_min            [L]     f32
+  s2_arrival                        [L]     int32
+  counter                           []      int32 (arrival counter)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.sketch import HASH_A1, HASH_A2, HASH_B, SketchParams
+
+_BIG = jnp.float32(3.4e38)
+
+
+def make_state(p: SketchParams):
+    d, m, L = p.d, p.m, p.L
+    z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    zf = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
+    return {
+        "keys_lo": z(d, m), "keys_hi": z(d, m), "valid": z(d, m),
+        "freq": z(d, m),
+        "s2_lo": z(L), "s2_hi": z(L), "s2_valid": z(L), "s2_count": z(L),
+        "s2_sum": zf(L), "s2_sumsq": zf(L), "s2_val": zf(L),
+        "s2_tmin": jnp.full((L,), _BIG, jnp.float32),
+        "s2_tmax": jnp.full((L,), -_BIG, jnp.float32),
+        "s2_min": jnp.full((L,), _BIG, jnp.float32),
+        "s2_arrival": jnp.full((L,), jnp.iinfo(jnp.int32).max, jnp.int32),
+        "counter": jnp.zeros((), jnp.int32),
+    }
+
+
+def hash_all(lo, hi, d: int, m: int):
+    """Bucket index per table; int32 wraparound arithmetic (TPU-native)."""
+    a1 = jnp.asarray((HASH_A1[:d] & 0xFFFFFFFF).astype(np.uint32)
+                     .view(np.int32))
+    a2 = jnp.asarray((HASH_A2[:d] & 0xFFFFFFFF).astype(np.uint32)
+                     .view(np.int32))
+    b = jnp.asarray((HASH_B[:d] & 0xFFFFFFFF).astype(np.uint32)
+                    .view(np.int32))
+    lo = jnp.asarray(lo, jnp.int32)[..., None]
+    hi = jnp.asarray(hi, jnp.int32)[..., None]
+    x = a1 * lo + a2 * hi + b                  # [..., d]
+    x = x ^ ((x >> 16) & 0xFFFF)
+    x = x * jnp.int32(0x45D9F3B)
+    x = x ^ ((x >> 13) & 0x7FFFF)
+    x = x & jnp.int32(0x7FFFFFFF)
+    return x % m
+
+
+def _insert_one(state, trace, *, H: int):
+    lo, hi = trace["lo"], trace["hi"]
+    dur, val, t = trace["dur"], trace["val"], trace["t"]
+    d, m = state["keys_lo"].shape
+    rows = jnp.arange(d)
+    idx = hash_all(lo, hi, d, m)
+
+    klo = state["keys_lo"][rows, idx]
+    khi = state["keys_hi"][rows, idx]
+    vld = state["valid"][rows, idx]
+    frq = state["freq"][rows, idx]
+
+    match = (vld == 1) & (klo == lo) & (khi == hi)
+    empty = vld == 0
+    newf = jnp.where(match, frq + 1, jnp.where(empty, 1, frq - 1))
+    newv = jnp.where(match | empty, 1, (newf > 0).astype(jnp.int32))
+    newlo = jnp.where(empty, lo, klo)
+    newhi = jnp.where(empty, hi, khi)
+    newf = jnp.where((~match) & (~empty) & (newf <= 0), 0, newf)
+
+    state = dict(state)
+    state["keys_lo"] = state["keys_lo"].at[rows, idx].set(newlo)
+    state["keys_hi"] = state["keys_hi"].at[rows, idx].set(newhi)
+    state["valid"] = state["valid"].at[rows, idx].set(newv)
+    state["freq"] = state["freq"].at[rows, idx].set(newf)
+
+    promoted = jnp.any((match | empty) & (newf >= H))
+
+    # ---- Stage-2 ----------------------------------------------------------
+    s2_match = (state["s2_valid"] == 1) & (state["s2_lo"] == lo) \
+        & (state["s2_hi"] == hi)
+    exists = jnp.any(s2_match)
+    j_upd = jnp.argmax(s2_match)
+    any_free = jnp.any(state["s2_valid"] == 0)
+    j_free = jnp.argmax(state["s2_valid"] == 0)
+    j_evict = jnp.argmin(jnp.where(state["s2_valid"] == 1,
+                                   state["s2_arrival"],
+                                   jnp.iinfo(jnp.int32).max))
+    j_new = jnp.where(any_free, j_free, j_evict)
+    j = jnp.where(exists, j_upd, j_new)
+
+    def upd(x, newval, on_new):
+        return x.at[j].set(jnp.where(promoted,
+                                     jnp.where(exists, newval, on_new),
+                                     x[j]))
+
+    cnt = state["s2_count"][j]
+    state["s2_lo"] = upd(state["s2_lo"], state["s2_lo"][j], lo)
+    state["s2_hi"] = upd(state["s2_hi"], state["s2_hi"][j], hi)
+    state["s2_valid"] = upd(state["s2_valid"], 1, 1)
+    state["s2_count"] = upd(state["s2_count"], cnt + 1, 1)
+    state["s2_sum"] = upd(state["s2_sum"], state["s2_sum"][j] + dur, dur)
+    state["s2_sumsq"] = upd(state["s2_sumsq"],
+                            state["s2_sumsq"][j] + dur * dur, dur * dur)
+    state["s2_val"] = upd(state["s2_val"], state["s2_val"][j] + val, val)
+    state["s2_tmin"] = upd(state["s2_tmin"],
+                           jnp.minimum(state["s2_tmin"][j], t), t)
+    state["s2_tmax"] = upd(state["s2_tmax"],
+                           jnp.maximum(state["s2_tmax"][j], t + dur),
+                           t + dur)
+    state["s2_min"] = upd(state["s2_min"],
+                          jnp.minimum(state["s2_min"][j], dur), dur)
+    state["s2_arrival"] = upd(state["s2_arrival"], state["s2_arrival"][j],
+                              state["counter"])
+    state["counter"] = state["counter"] + jnp.where(
+        promoted & ~exists, 1, 0).astype(jnp.int32)
+    return state
+
+
+@partial(jax.jit, static_argnames=("H",))
+def insert_batch(state, lo, hi, dur, val, t, *, H: int):
+    """Sequentially insert a batch of records (lax.scan)."""
+    def step(st, xs):
+        lo_, hi_, d_, v_, t_ = xs
+        return _insert_one(st, {"lo": lo_, "hi": hi_, "dur": d_,
+                                "val": v_, "t": t_}, H=H), None
+    state, _ = jax.lax.scan(step, state,
+                            (lo.astype(jnp.int32), hi.astype(jnp.int32),
+                             dur.astype(jnp.float32),
+                             val.astype(jnp.float32),
+                             t.astype(jnp.float32)))
+    return state

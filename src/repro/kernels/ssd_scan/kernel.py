@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: chunked Mamba-2 SSD scan.
+
+Grid (BH, n_chunks): the chunk dimension is sequential; the inter-chunk
+state S [P, N] lives in VMEM scratch across chunk steps (TPU revisiting
+semantics).  Per chunk the kernel computes the intra-chunk dual form (an
+MXU [Q,Q]·[Q,P] product with the decay-masked score matrix), adds the
+inter-chunk contribution C·Sᵀ·exp(cum), and updates the carried state —
+the same decomposition as ``repro.models.mamba2.ssd_chunked``, tiled so
+chunk Q and head dim P align to the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, out_state_ref,
+            state_scr, *, chunk: int, seq_len: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[:] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q]
+    a = a_ref[0]                              # scalar
+    b = b_ref[0].astype(jnp.float32)          # [Q, N]
+    c = c_ref[0].astype(jnp.float32)          # [Q, N]
+
+    # sequence mask for the padded tail
+    pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    live = (pos < seq_len).astype(jnp.float32)
+    dt = dt * live[:, 0]
+
+    l = dt * a                                # log-decay [Q]
+    cum = jnp.cumsum(l)
+    cum_end = cum[-1]
+
+    # intra-chunk dual form
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    decay = jnp.exp(jnp.minimum(cum[:, None] - cum[None, :], 0.0))
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gmat = jnp.where(kj <= qi, scores * decay, 0.0)
+    xdt = x * dt[:, None]
+    y = jax.lax.dot_general(gmat, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state
+    state = state_scr[:]                      # [P, N]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: S ← exp(cum_end)·S + Σ_j exp(cum_end−cum_j)·dt_j·x_j⊗B_j
+    w_end = jnp.exp(cum_end - cum) * dt       # [Q]
+    upd = jax.lax.dot_general(x * w_end[:, None], b,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    state_scr[:] = jnp.exp(cum_end) * state + upd
+
+    y_ref[0] = (y * live).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        out_state_ref[0] = state_scr[:]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = True):
+    """x [BH,S,P], dt [BH,S], a [BH], b/c [BH,S,N] →
+    (y [BH,S,P], final_state [BH,P,N])."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, seq_len=s),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk), lambda h, i: (h, i)),
+            pl.BlockSpec((1,), lambda h, i: (h,)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, p, n), lambda h, i: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc * chunk, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y[:, :s], state

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan: naive per-token recurrence.
+
+    S_t = exp(dt_t·a)·S_{t-1} + dt_t·(B_t ⊗ x_t)
+    y_t = C_t·S_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c, init_state=None):
+    """x [BH,S,P], dt [BH,S], a [BH], b/c [BH,S,N] →
+    (y [BH,S,P], final_state [BH,P,N])."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((bh, p, n), jnp.float32)
+
+    def step(state, xs):
+        xt, dtt, bt, ct = xs
+        decay = jnp.exp(dtt * a)[:, None, None]
+        upd = jnp.einsum("bp,bn,b->bpn", xt.astype(jnp.float32),
+                         bt.astype(jnp.float32), dtt)
+        state = decay * state + upd
+        y = jnp.einsum("bpn,bn->bp", state, ct.astype(jnp.float32))
+        return state, y
+
+    state, ys = jax.lax.scan(
+        step, init_state,
+        (x.transpose(1, 0, 2), dt.transpose(1, 0),
+         b.transpose(1, 0, 2), c.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), state

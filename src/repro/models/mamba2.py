@@ -1,0 +1,174 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked scan + decode step.
+
+The chunked form (chunk Q) computes, per head (state N, head dim P):
+
+    intra:  Y[i] += Σ_{j≤i in chunk} (C_i·B_j)·exp(cum_i−cum_j)·dt_j·x_j
+    state:  S_c   = exp(cum_end)·S_{c−1} + Σ_j exp(cum_end−cum_j)·dt_j·B_j⊗x_j
+    inter:  Y[i] += C_i · S_{c−1} · exp(cum_i)
+
+with cum = cumsum(dt·A) inside the chunk; the chunk recurrence runs under
+``lax.scan``.  A Pallas TPU kernel of the same algorithm lives in
+``repro.kernels.ssd_scan``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_mamba(cfg, rng, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    k = jax.random.split(rng, 4)
+    std = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(k[0], (d, 2 * di + 2 * g * n + h))
+                    * std).astype(dtype),
+        "conv_w": (jax.random.normal(k[1], (cfg.ssm_conv, conv_dim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(k[2], (di, d))
+                     * (di ** -0.5)).astype(dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * g * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg, xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv (kernel K).  conv_state [B,K-1,C] for decode."""
+    k = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)               # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i][None, None]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad[:, :0]
+    return jax.nn.silu(out + conv_b[None, None]), new_state
+
+
+def ssd_chunked(x, dt, a, b_in, c_in, chunk: int = 128, init_state=None):
+    """x [B,S,H,P], dt [B,S,H] (post-softplus), a [H] (negative),
+    b_in/c_in [B,S,G,N].  Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    rep = h // g
+    nc = (s + chunk - 1) // chunk
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b_in.reshape(bsz, nc, chunk, g, n)
+    cc = c_in.reshape(bsz, nc, chunk, g, n)
+
+    l = dtc * a[None, None, None, :]                 # log-decay per step
+    cum = jnp.cumsum(l, axis=2)                      # [B,nc,Q,H]
+    cum_end = cum[:, :, -1]                          # [B,nc,H]
+
+    # intra-chunk (dual / attention-like form)
+    bh = jnp.repeat(bc, rep, axis=3)                 # [B,nc,Q,H,N]
+    ch = jnp.repeat(cc, rep, axis=3)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", ch, bh,
+                        preferred_element_type=jnp.float32)
+    # decay[b,c,h,q,k] = exp(cum_q - cum_k); clamp the exponent at 0 so the
+    # (masked-out) upper triangle cannot produce inf and poison gradients
+    # through the jnp.where (exact for causal entries, where cum_q ≤ cum_k).
+    decay = jnp.exp(jnp.minimum(
+        cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+        - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3), 0.0))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gmat = jnp.where(mask[None, None, None], scores * decay, 0.0)
+    xdt = xc * dtc[..., None]
+    y = jnp.einsum("bchqk,bckhp->bcqhp", gmat.astype(x.dtype), xdt)
+
+    # per-chunk aggregate state: Σ_k exp(cum_end - cum_k)·dt_k·B_k⊗x_k
+    w_end = jnp.exp(cum_end[:, :, None, :] - cum)    # [B,nc,Q,H]
+    s_chunk = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", bh, xdt,
+                         w_end.astype(x.dtype))
+
+    # inter-chunk recurrence
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, xs):
+        s_c, ce = xs                                 # [B,H,P,N], [B,H]
+        out_state = state                            # state entering chunk
+        new = jnp.exp(ce)[:, :, None, None] * state + s_c.astype(jnp.float32)
+        return new, out_state
+
+    states_in, entry_states = jax.lax.scan(
+        step, init_state,
+        (s_chunk.transpose(1, 0, 2, 3, 4), cum_end.transpose(1, 0, 2)))
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch,
+                         entry_states.astype(x.dtype),
+                         jnp.exp(cum).astype(x.dtype))
+    y = (y + y_inter).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s], states_in
+
+
+def mamba_block(cfg, p, x, state=None):
+    """Full Mamba-2 mixer.  x [B,S,d].  state = (conv_state, ssm_state) for
+    decode (S may be 1); returns (y, new_state)."""
+    di, h, g, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_state
+    pdim = cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv = _causal_conv(cfg, xbc, p["conv_w"], p["conv_b"],
+                                 conv_state)
+    xs = xbc[..., :di]
+    b_in = xbc[..., di:di + g * n].reshape(*xbc.shape[:2], g, n)
+    c_in = xbc[..., di + g * n:].reshape(*xbc.shape[:2], g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(*xs.shape[:2], h, pdim)
+
+    if state is not None and x.shape[1] == 1:
+        # single-token decode: direct recurrence
+        ssm = state[1]                               # [B,H,P,N]
+        dt1 = dt[:, 0]                               # [B,H]
+        decay = jnp.exp(dt1 * a[None, :])
+        bh = jnp.repeat(b_in[:, 0], h // g, axis=1)  # [B,H,N]
+        ch = jnp.repeat(c_in[:, 0], h // g, axis=1)
+        upd = jnp.einsum("bhp,bhn,bh->bhpn", xh[:, 0].astype(jnp.float32),
+                         bh.astype(jnp.float32), dt1)
+        new_ssm = decay[:, :, None, None] * ssm + upd
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm,
+                       ch.astype(jnp.float32))[:, None]
+        y = y.astype(x.dtype)
+    else:
+        init = state[1] if state is not None else None
+        y, new_ssm = ssd_chunked(xh, dt, a, b_in, c_in,
+                                 chunk=min(128, max(16, x.shape[1])),
+                                 init_state=init)
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(*x.shape[:2], di)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm (Mamba-2)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * p["norm_scale"]).astype(x.dtype)
+    return y @ p["out_proj"], (new_conv, new_ssm)

@@ -1,0 +1,45 @@
+"""Activation-sharding policy (process-global, set by the launcher).
+
+The SPMD partitioner sometimes wanders between layouts inside the layer
+scan ("involuntary full rematerialization" → fully replicated activation
+buffers).  Pinning the residual stream to a canonical layout at period
+boundaries stops that.  Policy off (default) = no constraints, so model
+code stays mesh-agnostic for tests and single-device runs.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_POLICY: dict | None = None
+
+
+def set_policy(dp_axes: tuple[str, ...] | None, tp_axis: str | None,
+               seq_shard: bool = False):
+    """dp_axes shard the batch; tp_axis optionally shards the boundary
+    sequence dim (Megatron-SP style) when ``seq_shard``."""
+    global _POLICY
+    _POLICY = {"dp": dp_axes, "tp": tp_axis, "seq": seq_shard}
+
+
+def clear_policy():
+    global _POLICY
+    _POLICY = None
+
+
+def constrain_residual(x):
+    """x [B, S, d] — the residual stream at period boundaries."""
+    if _POLICY is None:
+        return x
+    dp = _POLICY["dp"] or None
+    seq = _POLICY["tp"] if _POLICY["seq"] else None
+    return jax.lax.with_sharding_constraint(x, P(dp, seq, None))
+
+
+def constrain_state(ssm):
+    """ssm [B, H, P, N] — decode state sharded over heads."""
+    if _POLICY is None:
+        return ssm
+    return jax.lax.with_sharding_constraint(
+        ssm, P(None, _POLICY["tp"], None, None))

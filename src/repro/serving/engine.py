@@ -1,0 +1,93 @@
+"""Batched serving runtime: prefill + decode loop over a request batch.
+
+Single-host reference implementation of the serve path the dry-run lowers
+at pod scale: uniform-batch prefill, greedy decode with the rolling KV /
+SSM cache, simple admission queue.  Per-step timing hooks feed the pod
+telemetry detector (straggler-aware serving).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch: int = 4
+    cache_len: int = 512
+    dtype: object = jnp.float32
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.queue: list[Request] = []
+        self.step_times: list[float] = []
+
+        self._prefill = jax.jit(
+            lambda p, toks, frames=None: T.prefill(
+                cfg, p, toks,
+                T.init_cache(cfg, ecfg.batch, ecfg.cache_len,
+                             dtype=ecfg.dtype),
+                enc_frames=frames, remat=False))
+        self._decode = jax.jit(
+            lambda p, toks, cache, pos, memory=None: T.decode_step(
+                cfg, p, toks, cache, pos, memory=memory))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _next_batch(self) -> list[Request]:
+        batch = self.queue[:self.ecfg.batch]
+        self.queue = self.queue[self.ecfg.batch:]
+        return batch
+
+    def run(self, enc_frames=None) -> list[Request]:
+        """Serve everything in the queue; returns completed requests."""
+        done: list[Request] = []
+        while self.queue:
+            batch = self._next_batch()
+            # pad the batch to engine batch size (replicate last request)
+            while len(batch) < self.ecfg.batch:
+                batch.append(Request(-1, batch[-1].prompt, 0))
+            s = max(len(r.prompt) for r in batch)
+            toks = np.stack([np.pad(r.prompt, (s - len(r.prompt), 0))
+                             for r in batch]).astype(np.int32)
+            t0 = time.perf_counter()
+            args = (self.params, toks) + ((enc_frames,) if self.cfg.enc_dec
+                                          else ())
+            out = self._prefill(*args)
+            last, cache = out[0], out[1]
+            memory = out[2] if self.cfg.enc_dec else None
+            nxt = jnp.argmax(last[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            self.step_times.append(time.perf_counter() - t0)
+            max_new = max(r.max_new for r in batch)
+            for k in range(max_new):
+                for r, t in zip(batch, np.asarray(nxt)[:, 0]):
+                    if r.rid >= 0 and len(r.out_tokens) < r.max_new:
+                        r.out_tokens.append(int(t))
+                t0 = time.perf_counter()
+                logits, cache = self._decode(self.params, nxt, cache,
+                                             jnp.int32(s + k), memory)
+                nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]\
+                    .astype(jnp.int32)
+                self.step_times.append(time.perf_counter() - t0)
+            done.extend(r for r in batch if r.rid >= 0)
+        return done

@@ -1,0 +1,72 @@
+"""Routing, EM link inference and detector unit behaviour."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.detection import em_link_inverse_bw, gamma_sf
+from repro.core.routing import Mesh2D
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 8), st.data())
+def test_xy_route_properties(w, h, data):
+    mesh = Mesh2D(w, h)
+    src = data.draw(st.integers(0, mesh.n_cores - 1))
+    dst = data.draw(st.integers(0, mesh.n_cores - 1))
+    path = mesh.route(src, dst)
+    # length = manhattan distance
+    assert len(path) == mesh.hops(src, dst)
+    # path is connected src → dst over adjacent links
+    cur = src
+    for lid in path:
+        u, v = mesh.links[lid]
+        assert u == cur
+        cur = v
+    assert cur == dst
+    # deterministic
+    assert path == mesh.route(src, dst)
+
+
+def test_link_ids_bijective():
+    mesh = Mesh2D(4)
+    assert mesh.n_links == 2 * (2 * 4 * 3)   # 2 directions × edges
+    seen = set()
+    for lid, (u, v) in enumerate(mesh.links):
+        assert mesh.link_id(u, v) == lid
+        assert (u, v) not in seen
+        seen.add((u, v))
+
+
+def test_em_recovers_slow_link():
+    """Synthetic tomography: events over known paths with one slow link."""
+    mesh = Mesh2D(4)
+    rng = np.random.default_rng(0)
+    theta_true = np.full(mesh.n_links, 1e-9)
+    slow = 20
+    theta_true[slow] = 1e-8
+    pairs = [(int(rng.integers(16)), int(rng.integers(16)))
+             for _ in range(400)]
+    pairs = [p for p in pairs if p[0] != p[1]]
+    A = mesh.path_matrix(pairs)
+    V = rng.uniform(1e3, 1e5, len(pairs))
+    T = (A * V[:, None]) @ theta_true
+    T *= rng.gamma(64, 1 / 64, len(T))       # mild noise
+    th = em_link_inverse_bw(A, T, V, np.ones(len(T)))
+    seen = A.sum(axis=0) > 0
+    assert seen[slow]
+    ranked = np.argsort(-np.where(seen, th, 0))
+    assert ranked[0] == slow
+    assert th[slow] > 4 * np.median(th[seen])
+
+
+def test_gamma_sf_properties():
+    assert gamma_sf(0.0, 2.0, 1.0) == pytest.approx(1.0)
+    assert gamma_sf(1e9, 2.0, 1.0) == pytest.approx(0.0, abs=1e-9)
+    # monotone decreasing
+    vals = [gamma_sf(x, 3.0, 0.5) for x in (0.1, 0.5, 1.0, 3.0, 10.0)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    # median of Gamma(1,1) ≈ ln 2
+    assert gamma_sf(np.log(2), 1.0, 1.0) == pytest.approx(0.5, abs=1e-6)

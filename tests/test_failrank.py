@@ -1,0 +1,89 @@
+"""MCG construction invariants and FailRank convergence."""
+
+import numpy as np
+import pytest
+
+from repro.core.detection import detect_cores, detect_links
+from repro.core.failrank import FailRankParams, failrank
+from repro.core.failures import FailSlow
+from repro.core.graph import build_workload
+from repro.core.mcg import build_mcg
+from repro.core.recorder import record
+from repro.core.routing import Mesh2D
+from repro.core.sloth import Sloth
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    mesh = Mesh2D(4)
+    sloth = Sloth(build_workload("darknet19"), mesh)
+    sim = sloth.run([FailSlow("core", 5, 1.0, 8.0)], seed=0)
+    rec = record(sim, sloth.cfg.sketch,
+                 hop_latency=sloth.sim_cfg.hop_latency)
+    cores = detect_cores(rec.comp_patterns, sim.total_time, 4)
+    links = detect_links(rec.comm_patterns, mesh, sim.total_time, 4,
+                         sloth.sim_cfg.hop_latency)
+    mcg = build_mcg(rec.comm_patterns, mesh, sim.total_time, cores, links, 4)
+    return mesh, mcg
+
+
+def test_mcg_weight_normalisation(pipeline):
+    """Σ_out w(u,·) = 1 for every node with outgoing edges."""
+    _, mcg = pipeline
+    sums = np.zeros(mcg.n_nodes)
+    np.add.at(sums, mcg.edge_src, mcg.edge_w)
+    has_out = np.zeros(mcg.n_nodes, bool)
+    has_out[mcg.edge_src] = True
+    assert np.allclose(sums[has_out], 1.0, atol=1e-9)
+
+
+def test_mcg_structure(pipeline):
+    mesh, mcg = pipeline
+    # virtual DRAM nodes exist and connect consecutive levels
+    assert mcg.n_nodes == mcg.n_windows * mesh.n_cores + mcg.n_windows
+    dram = set(range(mcg.n_windows * mesh.n_cores, mcg.n_nodes))
+    dram_edges = [i for i in range(len(mcg.edge_src))
+                  if int(mcg.edge_src[i]) in dram
+                  or int(mcg.edge_dst[i]) in dram]
+    assert dram_edges, "no inter-level (DRAM) edges"
+    for i in dram_edges:
+        assert not mcg.edge_link_path[i]        # virtual edges have no path
+    # physical edges route within one window level
+    for i, path in enumerate(mcg.edge_link_path):
+        if path:
+            ws = int(mcg.edge_src[i]) // mesh.n_cores
+            wd = int(mcg.edge_dst[i]) // mesh.n_cores
+            assert ws == wd
+
+
+def test_failrank_converges(pipeline):
+    _, mcg = pipeline
+    res = failrank(mcg, FailRankParams())
+    assert res.iterations < 100
+    assert res.residuals[-1] < 1e-4 or res.iterations == 100
+    # residuals eventually decay monotonically (geometric phase)
+    tail = res.residuals[2:]
+    assert all(a >= b * 0.999 for a, b in zip(tail, tail[1:]))
+
+
+def test_failrank_softmax_normalised(pipeline):
+    _, mcg = pipeline
+    res = failrank(mcg)
+    for lv in np.unique(mcg.node_window):
+        sel = mcg.node_window == lv
+        assert np.isclose(res.node_scores[sel].sum(), 1.0, atol=1e-6)
+
+
+def test_failrank_zero_signal():
+    """No initial evidence → flat scores, immediate convergence."""
+    mesh = Mesh2D(4)
+    sloth = Sloth(build_workload("binary_tree"), mesh)
+    sim = sloth.run(None, seed=0)
+    rec = record(sim, sloth.cfg.sketch,
+                 hop_latency=sloth.sim_cfg.hop_latency)
+    mcg = build_mcg(rec.comm_patterns, mesh, sim.total_time, [],
+                    detect_links([], mesh, sim.total_time), 4)
+    res = failrank(mcg)
+    assert float(np.max(res.raw_node_scores)) < 1e-6

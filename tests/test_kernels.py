@@ -1,0 +1,163 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+# ---------------------------------------------------------------------------
+# sketch_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,m,H,L,n", [(1, 32, 2, 8, 300), (2, 64, 4, 16,
+                                       700), (4, 128, 8, 32, 500)])
+def test_sketch_kernel_matches_ref(d, m, H, L, n):
+    from repro.core.sketch import SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O, ref as R
+    p = SketchParams(d=d, m=m, H=H, L=L)
+    rng = np.random.default_rng(d * 100 + m)
+    keys = rng.integers(0, 80, size=n).astype(np.int64) * 0x9E3779B9
+    lo, hi = split_key(keys)
+    dur = rng.random(n).astype(np.float32)
+    val = (rng.random(n) * 5).astype(np.float32)
+    t = np.cumsum(rng.random(n)).astype(np.float32)
+    args = tuple(jnp.asarray(x) for x in (lo, hi, dur, val, t))
+    st_r = R.insert_batch(R.make_state(p), *args, H=p.H)
+    st_p = O.insert(O.make_state(p), *args, params=p, impl="pallas",
+                    block=128)
+    for k in st_r:
+        a, b = np.asarray(st_r[k]), np.asarray(st_p[k])
+        if a.dtype.kind == "i":
+            assert np.array_equal(a, b), k
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5,
+                                       err_msg=k)
+
+
+def test_sketch_kernel_matches_numpy_oracle():
+    from repro.core.sketch import FailSlowSketch, SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O
+    p = SketchParams(d=2, m=64, H=4, L=16)
+    rng = np.random.default_rng(3)
+    n = 400
+    keys = rng.integers(0, 50, size=n).astype(np.int64) * 31337
+    lo, hi = split_key(keys)
+    dur = rng.random(n).astype(np.float32)
+    oracle = FailSlowSketch(p)
+    oracle.insert_stream(keys, dur, dur * 2, np.arange(n, dtype=float))
+    st = O.insert(O.make_state(p), jnp.asarray(lo), jnp.asarray(hi),
+                  jnp.asarray(dur), jnp.asarray(dur * 2),
+                  jnp.asarray(np.arange(n, dtype=np.float32)),
+                  params=p, impl="pallas")
+    pats = {q.key & 0x7FFFFFFF: q for q in O.patterns(st)}
+    exp = {int(k) & 0x7FFFFFFF: v for k, v in oracle.stage2.items()}
+    assert set(pats) == set(exp)
+    for k, q in pats.items():
+        assert q.count == exp[k].count
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,t,hq,hk,d,causal,win,dtype", [
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 256, 256, 2, 2, 32, True, 64, jnp.float32),
+    (2, 100, 200, 4, 1, 16, False, None, jnp.float32),
+    (1, 1, 384, 8, 4, 64, True, None, jnp.float32),
+    (1, 128, 128, 2, 2, 64, True, None, jnp.bfloat16),
+])
+def test_flash_attention_sweep(b, s, t, hq, hk, d, causal, win, dtype):
+    from repro.kernels.flash_attention.ops import gqa_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, t, hk, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, hk, d)).astype(dtype)
+    a = gqa_attention(q, k, v, causal=causal, window=win, impl="pallas",
+                      q_block=64, kv_block=64)
+    r = gqa_attention(q, k, v, causal=causal, window=win, impl="ref")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(r, np.float32), atol=tol,
+                               rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 96, 4, 32, 2, 16, 32),
+    (1, 200, 2, 16, 1, 8, 64),
+    (2, 64, 8, 8, 4, 8, 16),
+])
+def test_ssd_kernel_sweep(b, s, h, p, g, n, chunk):
+    from repro.kernels.ssd_scan.ops import ssd
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.3
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, g, n)) * 0.4
+    cc = jax.random.normal(ks[4], (b, s, g, n)) * 0.4
+    yp, sp = ssd(x, dt, a, bb, cc, impl="pallas", chunk=chunk)
+    yr, sr = ssd(x, dt, a, bb, cc, impl="ref")
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_model_ssd_matches_recurrence():
+    from repro.kernels.ssd_scan.ops import ssd
+    from repro.models.mamba2 import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    b, s, h, p, g, n = 2, 80, 4, 16, 2, 8
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.3
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, g, n)) * 0.4
+    cc = jax.random.normal(ks[4], (b, s, g, n)) * 0.4
+    ym, sm = ssd_chunked(x, dt, a, bb, cc, chunk=32)
+    yr, sr = ssd(x, dt, a, bb, cc, impl="ref")
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yr), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# failrank_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [40, 130, 260])
+def test_failrank_step_sweep(n):
+    from repro.kernels.failrank_step.kernel import failrank_step
+    from repro.kernels.failrank_step.ref import failrank_step_ref
+    rng = np.random.default_rng(n)
+    w = rng.random((n, n)).astype(np.float32)
+    w /= w.sum(1, keepdims=True)
+    l = rng.random((n, n)).astype(np.float32)
+    s = rng.random(n).astype(np.float32)
+    s0 = rng.random(n).astype(np.float32)
+    sp, lp = failrank_step(jnp.asarray(w), jnp.asarray(l), jnp.asarray(s),
+                           jnp.asarray(s0))
+    sr, lr = failrank_step_ref(jnp.asarray(w), jnp.asarray(l),
+                               jnp.asarray(s), jnp.asarray(s0))
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), atol=1e-5)
+
+
+def test_failrank_dense_matches_coo_pipeline():
+    from repro.core.failrank import failrank
+    from repro.core.failures import FailSlow
+    from repro.core.graph import build_workload
+    from repro.core.routing import Mesh2D
+    from repro.core.sloth import Sloth
+    from repro.kernels.failrank_step.ops import failrank_dense
+    sloth = Sloth(build_workload("darknet19"), Mesh2D(4))
+    v = sloth.detect([FailSlow("core", 5, 1.0, 8.0)], seed=0)
+    r_coo = failrank(v.mcg)
+    _, s_raw, _, _ = failrank_dense(v.mcg, impl="pallas")
+    np.testing.assert_allclose(s_raw, r_coo.raw_node_scores, atol=1e-4)

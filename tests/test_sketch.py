@@ -1,0 +1,110 @@
+"""Fail-Slow Sketch: Algorithm-1 semantics, run-compression exactness,
+jnp/Pallas parity, and the Lemma 3.1 retention bound."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketch import (FailSlowSketch, SketchParams,
+                               retention_lower_bound, split_key)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31), st.data())
+def test_run_equals_records(seed, data):
+    """insert_run(key, r, ...) ≡ r sequential insert() calls — exactly."""
+    rng = np.random.default_rng(seed)
+    p = SketchParams(d=data.draw(st.integers(1, 3)),
+                     m=data.draw(st.sampled_from([16, 64])),
+                     H=data.draw(st.integers(1, 8)), L=8)
+    n = 60
+    keys = rng.integers(0, 25, size=n)
+    reps = rng.integers(1, 9, size=n)
+    durs = rng.random(n)
+    t0s = np.cumsum(rng.random(n))
+    a, b = FailSlowSketch(p), FailSlowSketch(p)
+    for k, r, d, t in zip(keys, reps, durs, t0s):
+        a.insert_run(int(k), int(r), float(d), float(2 * d), float(t), 0.01)
+        for j in range(int(r)):
+            b.insert(int(k), float(d), float(2 * d), float(t + 0.01 * j))
+    assert np.array_equal(a.freq, b.freq)
+    assert np.array_equal(a.valid, b.valid)
+    assert set(a.stage2) == set(b.stage2)
+    for k in a.stage2:
+        pa, pb = a.stage2[k], b.stage2[k]
+        assert pa.count == pb.count and pa.arrival == pb.arrival
+        assert pa.sum_dur == pytest.approx(pb.sum_dur)
+        assert pa.min_dur == pytest.approx(pb.min_dur)
+
+
+def test_promotion_threshold():
+    p = SketchParams(d=1, m=8, H=5, L=4)
+    s = FailSlowSketch(p)
+    for i in range(4):
+        s.insert(42, 0.1, 1.0, float(i))
+    assert len(s.stage2) == 0           # below threshold
+    s.insert(42, 0.1, 1.0, 4.0)
+    assert 42 in s.stage2               # promoted exactly at H
+    assert s.stage2[42].count == 1      # stats start at promotion
+
+
+def test_fifo_eviction_and_drain():
+    p = SketchParams(d=1, m=64, H=1, L=2)
+    s = FailSlowSketch(p)
+    for k in (1, 2, 3):
+        s.insert(k, 0.1, 1.0, float(k))
+    assert len(s.stage2) == 2
+    assert 1 not in s.stage2            # earliest-arrival evicted
+    assert s.n_evicted == 1
+    # drained patterns still recoverable for analysis
+    keys = {q.key for q in s.patterns(include_drained=True)}
+    assert keys == {1, 2, 3}
+
+
+def test_majority_decrement():
+    p = SketchParams(d=1, m=1, H=100, L=4)   # force collisions
+    s = FailSlowSketch(p)
+    for _ in range(5):
+        s.insert(7, 0.1, 1.0, 0.0)
+    assert s.freq[0, 0] == 5
+    for _ in range(3):
+        s.insert(9, 0.1, 1.0, 0.0)           # decrements
+    assert s.freq[0, 0] == 2 and s.keys_lo[0, 0] == 7
+    for _ in range(3):
+        s.insert(9, 0.1, 1.0, 0.0)           # clears then claims
+    assert s.keys_lo[0, 0] == 9 and s.freq[0, 0] == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31))
+def test_retention_bound(seed):
+    """Hot patterns are retained at least as often as Lemma 3.1 predicts."""
+    rng = np.random.default_rng(seed)
+    p = SketchParams(d=2, m=64, H=4, L=64)
+    hot, f_hot = 999, 64
+    n_noise = 512
+    keys = np.concatenate([np.full(f_hot, hot),
+                           rng.integers(0, 5000, n_noise) + 1000])
+    rng.shuffle(keys)
+    s = FailSlowSketch(p)
+    for i, k in enumerate(keys):
+        s.insert(int(k), 0.1, 1.0, float(i))
+    bound = retention_lower_bound(len(keys), f_hot, p)
+    if bound >= 0.999:                  # near-certain retention predicted
+        assert hot in s.stage2
+
+
+def test_split_key_roundtrip():
+    keys = np.array([0, 1, 2**31 - 1, 2**40, 2**62 - 1], dtype=np.int64)
+    lo, hi = split_key(keys)
+    back = lo.astype(np.int64) + (hi.astype(np.int64) << 31)
+    assert np.array_equal(back, keys)
+
+
+def test_memory_budget():
+    """Default config stays within the paper's ~150 KiB on-chip budget for
+    the pair of sketches (comp + comm)."""
+    p = SketchParams()
+    assert 2 * p.total_bytes() <= 160 * 1024

@@ -1,0 +1,100 @@
+"""End-to-end SLOTH behaviour: localisation accuracy, FPR, compression,
+probe overhead, baselines, and the pod-level telemetry detector."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.compiler import plan_for_mode, plan_probes
+from repro.core.failures import FailSlow, effective_samples, make_dataset
+from repro.core.graph import build_workload
+from repro.core.routing import Mesh2D
+from repro.core.simulator import simulate
+from repro.core.sloth import Sloth
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(scope="module")
+def sloth():
+    return Sloth(build_workload("resnet50"), Mesh2D(4))
+
+
+def test_core_failure_localised(sloth):
+    v = sloth.detect([FailSlow("core", 6, 1.0, 8.0)], seed=1)
+    assert v.flagged and v.kind == "core" and v.location == 6
+
+
+def test_link_failure_localised(sloth):
+    v = sloth.detect([FailSlow("link", 20, 1.0, 8.0)], seed=1)
+    assert v.flagged and v.kind == "link"
+    # exact link or within top-3 of the ranking
+    top = [(k, l) for k, l, _ in v.ranking[:3]]
+    assert v.location == 20 or ("link", 20) in top
+
+
+def test_healthy_not_flagged(sloth):
+    flagged = sum(sloth.detect(None, seed=s).flagged for s in range(5))
+    assert flagged <= 1          # FPR well under 50% on this small sample
+
+
+def test_accuracy_beats_50pct(sloth):
+    healthy = sloth.run(None, seed=999)
+    used = set()
+    for s, d in zip(healthy.comm["src"], healthy.comm["dst"]):
+        if s != d:
+            used.update(sloth.mesh.route(int(s), int(d)))
+    ds = effective_samples(make_dataset(sloth.mesh, 10, seed=3),
+                           healthy.total_time, used)
+    pos = [s for s in ds if s.failure is not None]
+    ok = sum(sloth.detect([s.failure], seed=100 + s.sample_id)
+             .matches(s.failure) for s in pos)
+    assert ok / len(pos) > 0.5
+
+
+def test_compression_ratio(sloth):
+    v = sloth.detect([FailSlow("core", 3, 1.0, 5.0)], seed=0)
+    assert v.recorder.compression_ratio > 20
+
+
+def test_probe_overhead_small(sloth):
+    import dataclasses as dc
+    cfg = dc.replace(sloth.sim_cfg, seed=0)
+    t_none = simulate(sloth.mapped, cfg, probes=None).total_time
+    t_full = simulate(sloth.mapped, cfg,
+                      probes=plan_for_mode("full")).total_time
+    assert (t_full / t_none - 1) < 0.10        # ≤10% (paper Fig 10)
+
+
+def test_probe_plan_structure(sloth):
+    plan = plan_probes(sloth.graph, sloth.mapped)
+    assert "conv" in plan.exec_ops             # compute-heavy ops probed
+    assert len(plan.specs) >= 2                # Exec + Route probes
+    assert plan.route_stages                   # data movement covered
+
+
+def test_baselines_run(sloth):
+    profile = sloth.run(None, seed=12345)
+    sim = sloth.run([FailSlow("core", 5, 1.0, 8.0)], seed=1)
+    flags = {}
+    for cls in B.ALL_BASELINES:
+        det = cls(sloth.mesh, profile)
+        v = det.detect(sim)
+        flags[det.name] = (v.flagged, v.kind, v.location)
+    # the stronger baselines find the core failure
+    assert flags["thres"][0] and flags["perseus"][0]
+    assert flags["perseus"][1:] == ("core", 5)
+
+
+def test_pod_telemetry_detects_straggler():
+    from repro.distributed.telemetry import (PodDetector, PodSimulator,
+                                             PodTelemetryConfig)
+    cfg = PodTelemetryConfig(mesh_w=4, mesh_h=4)
+    pod = PodSimulator(cfg, step_flops=5e12, collective_bytes=1e9, seed=0)
+    det = PodDetector(cfg)
+    healthy = pod.run_steps(48)
+    assert not det.analyse(healthy).flagged
+    pod.inject(FailSlow("core", 9, 0.0, 1e9, 4.0))
+    v = det.analyse(pod.run_steps(48))
+    assert v.flagged and v.kind == "core" and v.location == 9
+    assert v.action in ("rebalance", "exclude_and_restart")

@@ -1,0 +1,152 @@
+"""Data pipeline, checkpointing, optimizer and serving runtime."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.optim import adamw
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 50))
+def test_pipeline_deterministic(seed, step):
+    cfg = DataConfig(vocab=1000, batch=8, seq=16, seed=seed)
+    a = TokenPipeline(cfg).batch_at(step)
+    b = TokenPipeline(cfg).batch_at(step)
+    assert np.array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 1000
+
+
+def test_pipeline_shards_partition():
+    cfg = DataConfig(vocab=100, batch=8, seq=4, seed=1)
+    full = TokenPipeline(cfg).batch_at(3)
+    parts = [TokenPipeline(cfg, shard=i, n_shards=4).shard_at(3)
+             for i in range(4)]
+    assert np.array_equal(np.concatenate(parts), full)
+
+
+def test_pipeline_resume():
+    cfg = DataConfig(vocab=100, batch=4, seq=8, seed=0)
+    p = TokenPipeline(cfg)
+    for _ in range(5):
+        next(p)
+    state = p.state()
+    expected = next(TokenPipeline.restore(cfg, state))
+    q = TokenPipeline(cfg)
+    for _ in range(5):
+        next(q)
+    assert np.array_equal(next(q), expected)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)}}
+    store.save(str(tmp_path), 7, tree, extra={"data": {"step": 7,
+                                                       "seed": 0}})
+    assert store.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, extra = store.restore(str(tmp_path), 7, like)
+    assert extra["data"]["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        store.save(str(tmp_path), s, tree, keep=2)
+    assert sorted(store.all_steps(str(tmp_path))) == [4, 5]
+
+
+def test_checkpoint_atomicity(tmp_path):
+    tree = {"x": jnp.ones((4,))}
+    store.save(str(tmp_path), 1, tree)
+    # a stale tmp dir from a crashed writer must not break anything
+    os.makedirs(tmp_path / ".tmp_step_2", exist_ok=True)
+    assert store.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore onto explicit device placements (1-device 'new mesh')."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    store.save(str(tmp_path), 3, tree)
+    mesh = jax.make_mesh((1,), ("model",))
+    sh = {"w": NamedSharding(mesh, P("model", None))}
+    restored, _ = store.restore(str(tmp_path), 3, tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    assert np.array_equal(np.asarray(restored["w"]),
+                          np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=2000,
+                            weight_decay=0.0, clip_norm=1e9,
+                            min_lr_frac=1.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw.init_state(params, cfg)
+    norms = []
+    for _ in range(150):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw.apply(params, grads, state, cfg)
+        norms.append(float(jnp.abs(params["x"]).max()))
+    assert norms[-1] < 0.5
+    assert norms[-1] < norms[0]          # monotone progress overall
+
+
+def test_adamw_clips_gradients():
+    cfg = adamw.AdamWConfig(clip_norm=1.0)
+    params = {"x": jnp.zeros(3)}
+    state = adamw.init_state(params, cfg)
+    _, _, stats = adamw.apply(params, {"x": jnp.full(3, 1e6)}, state, cfg)
+    assert float(stats["grad_norm"]) > 1.0   # raw norm reported
+
+
+def test_adamw_bf16_state():
+    cfg = adamw.AdamWConfig(state_dtype=jnp.bfloat16)
+    params = {"x": jnp.ones(4)}
+    state = adamw.init_state(params, cfg)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    p2, s2, _ = adamw.apply(params, {"x": jnp.ones(4)}, state, cfg)
+    assert s2["v"]["x"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_serving_engine_batches():
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig, Request, ServeEngine
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_model(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    eng = ServeEngine(cfg, params, EngineConfig(batch=2, cache_len=64))
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab, size=8)
+                           .astype(np.int32), max_new=4))
+    done = eng.run()
+    assert len(done) == 3
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.out_tokens)

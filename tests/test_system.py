@@ -1,0 +1,79 @@
+"""End-to-end system behaviour: training convergence, crash-resume,
+straggler mitigation loop."""
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def test_training_loss_decreases(tmp_path):
+    """Memorisation check: a fixed batch must be learnable well below the
+    uniform-entropy floor (the synthetic stream itself is uniform, so the
+    launcher integration test asserts continuity, not convergence)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.launch.steps import CellPlan, make_train_step
+    from repro.models import transformer as T
+    from repro.optim import adamw
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_model(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=2000,
+                                min_lr_frac=1.0)
+    opt = adamw.init_state(params, opt_cfg)
+    step = jax.jit(make_train_step(
+        cfg, CellPlan(grad_accum=1, remat=False,
+                      param_dtype=jnp.float32), opt_cfg))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                cfg.vocab)
+    losses = []
+    for _ in range(40):
+        params, opt, loss, _ = step(params, opt, tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_crash_resume_continuity(tmp_path):
+    """Training N steps straight equals training with a crash+resume in the
+    middle (same data stream, same final loss)."""
+    from repro.launch.train import main
+    ck1 = str(tmp_path / "a")
+    ck2 = str(tmp_path / "b")
+    full = main(["--arch", "smollm-135m", "--smoke", "--steps", "20",
+                 "--batch", "2", "--seq", "32", "--ckpt-dir", ck1,
+                 "--ckpt-every", "10", "--log-every", "100"])
+    main(["--arch", "smollm-135m", "--smoke", "--steps", "10",
+          "--batch", "2", "--seq", "32", "--ckpt-dir", ck2,
+          "--ckpt-every", "10", "--log-every", "100"])
+    resumed = main(["--arch", "smollm-135m", "--smoke", "--steps", "20",
+                    "--batch", "2", "--seq", "32", "--ckpt-dir", ck2,
+                    "--resume", "--log-every", "100"])
+    assert resumed[-1] == pytest.approx(full[-1], rel=1e-4)
+
+
+def test_mitigation_policy_actions():
+    from repro.distributed.telemetry import MitigationPolicy, PodVerdict
+    pol = MitigationPolicy(n_shards=4)
+    assert pol.plan(PodVerdict(False, None, None, 0, "none"))["action"] \
+        == "none"
+    plan = pol.plan(PodVerdict(True, "core", 5, 4.0, "rebalance"))
+    assert plan["action"] == "rebalance"
+    w = plan["shard_weights"]
+    assert w.sum() == pytest.approx(1.0) and w[1] < w[0]
+    plan = pol.plan(PodVerdict(True, "core", 5, 12.0,
+                               "exclude_and_restart"))
+    assert plan["action"] == "exclude_and_restart"
+    assert plan["exclude"] == ("core", 5)
+
+
+def test_pod_link_failure_detected():
+    from repro.core.failures import FailSlow
+    from repro.distributed.telemetry import (PodDetector, PodSimulator,
+                                             PodTelemetryConfig)
+    cfg = PodTelemetryConfig(mesh_w=4, mesh_h=4)
+    pod = PodSimulator(cfg, step_flops=5e12, collective_bytes=4e9, seed=1)
+    pod.inject(FailSlow("link", 11, 0.0, 1e9, 8.0))
+    det = PodDetector(cfg)
+    v = det.analyse(pod.run_steps(48))
+    assert v.flagged and v.kind == "link" and v.location == 11
