@@ -48,6 +48,43 @@ def bench_kernels():
                  f"parity={par}"))
     rows.append(("kern_sketch_jnpref_2048rec", round(us_r, 1), ""))
 
+    # vectorized multi-record batch path vs per-record insertion: (a) the
+    # streaming alternative — one jitted insert dispatch per record, how an
+    # online monitor would feed device state — and (b) the numpy
+    # Algorithm-1 oracle loop, for reference.
+    from repro.core.sketch import FailSlowSketch
+    t_np = np.asarray(args[4])
+
+    def per_record_np():
+        s = FailSlowSketch(p)
+        s.insert_stream(keys, dur, dur * 2, t_np.astype(np.float64))
+        return s
+    us_np, oracle = _timeit(per_record_np, reps=1)
+
+    n_stream = 256                      # extrapolated to the full batch
+
+    def per_record_jnp():
+        st = SO.make_state(p)
+        for k in range(n_stream):
+            st = SO.insert(st, *(a[k:k + 1] for a in args), params=p,
+                           impl="batched")
+        return st
+    us_1, _ = _timeit(per_record_jnp, reps=1)
+    us_1 *= n / n_stream
+
+    us_b, st_b = _timeit(lambda: SO.insert(SO.make_state(p), *args,
+                                           params=p, impl="batched"))
+    par_b = int(np.array_equal(np.asarray(st_b["freq"]), oracle.freq)
+                and np.array_equal(np.asarray(st_r["freq"]),
+                                   np.asarray(st_b["freq"])))
+    rows.append(("kern_sketch_perrecord_np_2048rec", round(us_np, 1), ""))
+    rows.append(("kern_sketch_perrecord_jnp_2048rec", round(us_1, 1),
+                 "extrapolated"))
+    rows.append(("kern_sketch_batched_2048rec", round(us_b, 1),
+                 f"parity={par_b} "
+                 f"speedup_vs_perrecord={us_1 / max(us_b, 1e-9):.1f}x "
+                 f"speedup_vs_numpy={us_np / max(us_b, 1e-9):.1f}x"))
+
     # flash attention
     from repro.kernels.flash_attention.ops import gqa_attention
     q = jax.random.normal(rng, (2, 256, 4, 64))

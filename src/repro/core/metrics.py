@@ -1,0 +1,169 @@
+"""Campaign metric aggregation (paper §IV: Table III, Figs 11/12/16/17).
+
+Pure, deterministic reductions over per-scenario outcomes.  The campaign
+runner (``campaign.py``) produces one :class:`ScenarioOutcome` per injected
+(or failure-free) scenario; this module turns a list of outcomes into the
+paper-style aggregates:
+
+* **accuracy** — fraction of *positive* scenarios whose top-1 verdict names
+  the injected root cause (router failures accept any link of the slowed
+  router, since the detector localises at link granularity),
+* **FPR** — fraction of *negative* (failure-free) scenarios that were
+  flagged,
+* **top-k localisation rate** — fraction of positives whose ground truth
+  appears within the first k entries of the ranking (monotone in k),
+* **compression ratio** and **probe overhead** means.
+
+Binomial rates carry Wilson score confidence intervals so small grid cells
+report honest uncertainty.  Everything here is plain float arithmetic in a
+fixed order: identical outcome lists produce bit-identical metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioOutcome:
+    """Result of one campaign scenario (the exchange record between the
+    runner and the aggregators)."""
+    scenario_id: int
+    workload: str
+    mesh_w: int
+    mesh_h: int
+    kind: str                  # 'core' | 'link' | 'router' | 'none'
+    severity: float            # injected slowdown (0.0 for 'none')
+    rep: int                   # replicate index within the grid cell
+    sim_seed: int              # simulator seed actually used
+    # ground truth (None fields for negative samples)
+    truth_location: int | None
+    t0: float | None
+    duration: float | None
+    # verdict
+    flagged: bool
+    pred_kind: str | None
+    pred_location: int | None
+    score: float
+    matched: bool              # top-1 correctness (router-aware)
+    truth_rank: int | None     # 1-based rank of truth in ranking, or None
+    # accounting
+    compression_ratio: float
+    total_time: float
+    baseline_results: tuple = ()   # ((name, flagged, matched), ...)
+
+    @property
+    def positive(self) -> bool:
+        return self.kind != "none"
+
+    def cell(self) -> tuple:
+        return (self.workload, self.mesh_w, self.mesh_h, self.kind,
+                self.severity)
+
+
+@dataclasses.dataclass(frozen=True)
+class BinomialStat:
+    """k successes out of n trials with a Wilson score interval."""
+    successes: int
+    trials: int
+    z: float = 1.96
+
+    @property
+    def rate(self) -> float:
+        return self.successes / self.trials if self.trials else 0.0
+
+    @property
+    def interval(self) -> tuple[float, float]:
+        return wilson_interval(self.successes, self.trials, self.z)
+
+    def pct(self) -> float:
+        return 100.0 * self.rate
+
+
+def wilson_interval(k: int, n: int, z: float = 1.96) -> tuple[float, float]:
+    """Wilson score interval for a binomial proportion (exact at n=0)."""
+    if n == 0:
+        return (0.0, 1.0)
+    p = k / n
+    denom = 1.0 + z * z / n
+    centre = (p + z * z / (2 * n)) / denom
+    half = (z / denom) * math.sqrt(p * (1 - p) / n + z * z / (4 * n * n))
+    return (max(0.0, centre - half), min(1.0, centre + half))
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignMetrics:
+    """Aggregate metrics over a set of scenario outcomes."""
+    n_scenarios: int
+    accuracy: BinomialStat          # over positives
+    fpr: BinomialStat               # over negatives
+    topk: tuple[tuple[int, BinomialStat], ...]   # ((k, stat), ...)
+    mean_compression: float
+    mean_probe_overhead: float      # filled by the runner (per deployment)
+
+    def topk_rate(self, k: int) -> float:
+        for kk, stat in self.topk:
+            if kk == k:
+                return stat.rate
+        raise KeyError(k)
+
+
+def topk_stat(outcomes: list[ScenarioOutcome], k: int) -> BinomialStat:
+    pos = [o for o in outcomes if o.positive]
+    hits = sum(1 for o in pos
+               if o.truth_rank is not None and o.truth_rank <= k)
+    return BinomialStat(hits, len(pos))
+
+
+def aggregate(outcomes: list[ScenarioOutcome],
+              ks: tuple[int, ...] = (1, 3, 5),
+              probe_overhead: float = 0.0) -> CampaignMetrics:
+    """Reduce outcomes to campaign metrics.
+
+    Positives feed accuracy/top-k; negatives feed FPR only — a grid cell
+    with ``kind='none'`` therefore contributes zero accuracy trials.
+    """
+    pos = [o for o in outcomes if o.positive]
+    neg = [o for o in outcomes if not o.positive]
+    acc = BinomialStat(sum(o.matched for o in pos), len(pos))
+    fpr = BinomialStat(sum(o.flagged for o in neg), len(neg))
+    comp = [o.compression_ratio for o in outcomes]
+    mean_comp = sum(comp) / len(comp) if comp else 0.0
+    return CampaignMetrics(
+        n_scenarios=len(outcomes),
+        accuracy=acc,
+        fpr=fpr,
+        topk=tuple((k, topk_stat(outcomes, k)) for k in ks),
+        mean_compression=mean_comp,
+        mean_probe_overhead=probe_overhead,
+    )
+
+
+def by_cell(outcomes: list[ScenarioOutcome],
+            ks: tuple[int, ...] = (1, 3, 5)) \
+        -> dict[tuple, CampaignMetrics]:
+    """Per-cell aggregation, keyed (workload, mesh_w, mesh_h, kind,
+    severity).  Cells appear in first-occurrence (enumeration) order."""
+    cells: dict[tuple, list[ScenarioOutcome]] = {}
+    for o in outcomes:
+        cells.setdefault(o.cell(), []).append(o)
+    return {c: aggregate(v, ks=ks) for c, v in cells.items()}
+
+
+def baseline_stats(outcomes: list[ScenarioOutcome]) \
+        -> dict[str, tuple[BinomialStat, BinomialStat]]:
+    """Per-baseline (accuracy, fpr) over outcomes that carry baseline
+    verdicts (campaign run with ``baselines=True``)."""
+    acc: dict[str, list[int]] = {}
+    fpr: dict[str, list[int]] = {}
+    for o in outcomes:
+        for name, flagged, matched in o.baseline_results:
+            if o.positive:
+                acc.setdefault(name, []).append(int(matched))
+            else:
+                fpr.setdefault(name, []).append(int(flagged))
+    names = sorted(set(acc) | set(fpr))
+    return {n: (BinomialStat(sum(acc.get(n, [])), len(acc.get(n, []))),
+                BinomialStat(sum(fpr.get(n, [])), len(fpr.get(n, []))))
+            for n in names}

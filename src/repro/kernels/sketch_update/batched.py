@@ -1,0 +1,125 @@
+"""Vectorized multi-record Fail-Slow Sketch insertion (campaign hot path).
+
+Same Algorithm-1 semantics as ``ref.insert_batch`` (and therefore the
+``core/sketch.py`` numpy oracle), restructured for batch throughput:
+
+* bucket indices for **all** records × all ``d`` hash tables are computed
+  up front in one vectorized ``hash_all`` call (the per-record path
+  re-hashes inside every step),
+* Stage-1 state is packed ``[d, m, 4]`` (lo, hi, valid, freq) and the
+  per-table update rule is ``vmap``-ed over the ``d`` hash tables, so one
+  record costs one batched gather + one batched scatter,
+* Stage-2 state is packed into an int ``[L, 5]`` (lo, hi, valid, count,
+  arrival) and a float ``[L, 6]`` (sum, sumsq, val, tmin, tmax, min)
+  matrix — one row scatter each per record instead of eleven vector
+  scatters,
+* records are applied in order by ``lax.scan`` (insertion order is
+  semantically load-bearing: Stage-1 frequencies race between keys sharing
+  a bucket and Stage-2 eviction is FIFO by promotion arrival).
+
+The packing is an internal layout change only: inputs/outputs use the
+``ref.make_state`` dict layout, integer state is bit-identical to the
+sequential reference and the float statistics accumulate in the same
+float32 order.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ref import hash_all
+
+_I32MAX = jnp.iinfo(jnp.int32).max
+
+
+def _one_table(tbl, j, lo, hi, H):
+    """Stage-1 update for one packed hash-table row ``[m, 4]`` (vmapped
+    over the d tables); returns (new row, promoted-on-this-table)."""
+    bk = tbl[j]                                  # (lo, hi, valid, freq)
+    match = (bk[2] == 1) & (bk[0] == lo) & (bk[1] == hi)
+    empty = bk[2] == 0
+    newf = jnp.where(match, bk[3] + 1, jnp.where(empty, 1, bk[3] - 1))
+    newv = jnp.where(match | empty, 1, (newf > 0).astype(jnp.int32))
+    newlo = jnp.where(empty, lo, bk[0])
+    newhi = jnp.where(empty, hi, bk[1])
+    newf = jnp.where((~match) & (~empty) & (newf <= 0), 0, newf)
+    promoted = (match | empty) & (newf >= H)
+    return tbl.at[j].set(jnp.stack([newlo, newhi, newv, newf])), promoted
+
+
+_tables = jax.vmap(_one_table, in_axes=(0, 0, None, None, None))
+
+
+def _step(carry, xs, H: int):
+    T, I, F, C = carry
+    idx, lo, hi, dur, val, t = xs
+    T, prom = _tables(T, idx, lo, hi, H)
+    promoted = jnp.any(prom)
+
+    # ---- Stage-2: slot selection exactly as the reference --------------
+    valid = I[:, 2]
+    s2_match = (valid == 1) & (I[:, 0] == lo) & (I[:, 1] == hi)
+    exists = jnp.any(s2_match)
+    j_upd = jnp.argmax(s2_match)
+    free = valid == 0
+    any_free = jnp.any(free)
+    j_free = jnp.argmax(free)
+    j_evict = jnp.argmin(jnp.where(valid == 1, I[:, 4], _I32MAX))
+    j = jnp.where(exists, j_upd, jnp.where(any_free, j_free, j_evict))
+
+    ri, rf = I[j], F[j]
+    upd_i = jnp.stack([ri[0], ri[1], 1, ri[3] + 1, ri[4]])
+    new_i = jnp.stack([lo, hi, 1, 1, C])
+    upd_f = jnp.stack([rf[0] + dur, rf[1] + dur * dur, rf[2] + val,
+                       jnp.minimum(rf[3], t),
+                       jnp.maximum(rf[4], t + dur),
+                       jnp.minimum(rf[5], dur)])
+    new_f = jnp.stack([dur, dur * dur, val, t, t + dur, dur])
+    I = I.at[j].set(jnp.where(promoted,
+                              jnp.where(exists, upd_i, new_i), ri))
+    F = F.at[j].set(jnp.where(promoted,
+                              jnp.where(exists, upd_f, new_f), rf))
+    C = C + jnp.where(promoted & ~exists, 1, 0).astype(jnp.int32)
+    return (T, I, F, C), None
+
+
+@partial(jax.jit, static_argnames=("H",))
+def insert_batch_vectorized(state, lo, hi, dur, val, t, *, H: int):
+    """Insert a whole record batch; state layout matches ``ref.make_state``.
+
+    Equivalent to ``ref.insert_batch`` / per-record ``FailSlowSketch
+    .insert`` calls in order, with hashing hoisted out of the sequential
+    loop, the table update vectorized over ``d`` and the state packed so
+    each record costs a handful of row scatters.
+    """
+    d, m = state["keys_lo"].shape
+    lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
+    dur, val, t = (dur.astype(jnp.float32), val.astype(jnp.float32),
+                   t.astype(jnp.float32))
+    idx_all = hash_all(lo, hi, d, m)             # [n, d], one shot
+
+    T = jnp.stack([state["keys_lo"], state["keys_hi"],
+                   state["valid"], state["freq"]], axis=2)
+    I = jnp.stack([state["s2_lo"], state["s2_hi"], state["s2_valid"],
+                   state["s2_count"], state["s2_arrival"]], axis=1)
+    F = jnp.stack([state["s2_sum"], state["s2_sumsq"], state["s2_val"],
+                   state["s2_tmin"], state["s2_tmax"], state["s2_min"]],
+                  axis=1)
+    (T, I, F, C), _ = jax.lax.scan(
+        partial(_step, H=H), (T, I, F, state["counter"]),
+        (idx_all, lo, hi, dur, val, t))
+
+    out = dict(state, counter=C)
+    for k, col in (("keys_lo", 0), ("keys_hi", 1), ("valid", 2),
+                   ("freq", 3)):
+        out[k] = T[..., col]
+    for k, col in (("s2_lo", 0), ("s2_hi", 1), ("s2_valid", 2),
+                   ("s2_count", 3), ("s2_arrival", 4)):
+        out[k] = I[:, col]
+    for k, col in (("s2_sum", 0), ("s2_sumsq", 1), ("s2_val", 2),
+                   ("s2_tmin", 3), ("s2_tmax", 4), ("s2_min", 5)):
+        out[k] = F[:, col]
+    return out

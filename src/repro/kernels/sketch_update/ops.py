@@ -1,9 +1,10 @@
 """Jitted public API for the sketch-update kernel.
 
 ``insert(state, traces, impl=...)`` dispatches between the Pallas kernel
-(TPU target; ``interpret=True`` on CPU) and the pure-jnp oracle.
-``patterns(state)`` decodes Stage-2 into the same Pattern records the
-numpy reference produces.
+(TPU target; ``interpret=True`` on CPU), the vectorized multi-record batch
+path (``impl="batched"``, the campaign hot path) and the pure-jnp scan
+oracle.  ``patterns(state)`` decodes Stage-2 into the same Pattern records
+the numpy reference produces.
 """
 
 from __future__ import annotations
@@ -11,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from ...core.sketch import Pattern, SketchParams
+from . import batched as V
 from . import kernel as K
 from . import ref as R
 
@@ -24,6 +26,9 @@ def insert(state, lo, hi, dur, val, t, *, params: SketchParams,
     if impl == "pallas":
         return K.sketch_insert(state, lo, hi, dur, val, t, params=params,
                                block=block, interpret=interpret)
+    if impl == "batched":
+        return V.insert_batch_vectorized(state, lo, hi, dur, val, t,
+                                         H=params.H)
     return R.insert_batch(state, lo, hi, dur, val, t, H=params.H)
 
 

@@ -65,10 +65,16 @@ def hash_all(lo, hi, d: int, m: int):
 def _insert_one(state, trace, *, H: int):
     lo, hi = trace["lo"], trace["hi"]
     dur, val, t = trace["dur"], trace["val"], trace["t"]
-    d, m = state["keys_lo"].shape
-    rows = jnp.arange(d)
-    idx = hash_all(lo, hi, d, m)
+    idx = hash_all(lo, hi, *state["keys_lo"].shape)
+    state, promoted = stage1_update(state, idx, lo, hi, H=H)
+    return stage2_update(state, lo, hi, dur, val, t, promoted)
 
+
+def stage1_update(state, idx, lo, hi, *, H: int):
+    """Stage-1 bucket update for one record given its ``d`` precomputed
+    bucket indices; returns (state, promoted)."""
+    d = state["keys_lo"].shape[0]
+    rows = jnp.arange(d)
     klo = state["keys_lo"][rows, idx]
     khi = state["keys_hi"][rows, idx]
     vld = state["valid"][rows, idx]
@@ -89,8 +95,13 @@ def _insert_one(state, trace, *, H: int):
     state["freq"] = state["freq"].at[rows, idx].set(newf)
 
     promoted = jnp.any((match | empty) & (newf >= H))
+    return state, promoted
 
-    # ---- Stage-2 ----------------------------------------------------------
+
+def stage2_update(state, lo, hi, dur, val, t, promoted):
+    """Stage-2 bounded-list update for one record (vector over L);
+    shared by the scan reference and the vectorized batch path so both
+    are bit-identical."""
     s2_match = (state["s2_valid"] == 1) & (state["s2_lo"] == lo) \
         & (state["s2_hi"] == hi)
     exists = jnp.any(s2_match)

@@ -68,17 +68,36 @@ class _Comp:
     consts: list
 
 
-def _dot_flops(line: str, out_elems: int) -> float:
-    shapes = _SHAPE_RE.findall(line)
-    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-    contract = 1
-    if m and m.group(1) and len(shapes) >= 2:
-        # shapes[0] = result, shapes[1] = lhs (from operand decl in header?)
-        # operands are name-only in optimized HLO; recover the contraction
-        # size from metadata is impossible — instead use the lhs shape if
-        # present, else leave 1 and let the caller patch via symbol table.
-        pass
-    return 2.0 * out_elems * contract
+def _split_operands(args: str) -> list[str]:
+    """Split an operand list on top-level commas only (shape dims like
+    ``f32[1,3,224,224]{3,2,1,0}`` contain commas of their own)."""
+    out, cur, depth = [], [], 0
+    for ch in args:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _operand_dims(args: str, k: int, symshape: dict) -> list:
+    """Dims of the k-th operand of an op.  Optimized HLO declares operand
+    shapes inline ("dot(f32[128,128]{1,0} %a, ...)"); name-only operands
+    fall back to the symbol table."""
+    parts = _split_operands(args)
+    if k >= len(parts):
+        return []
+    m = _SHAPE_RE.search(parts[k])
+    if m:
+        return [int(x) for x in m.group(2).split(",") if x]
+    return symshape.get(parts[k].split()[-1].lstrip("%"), [])
 
 
 class Analyzer:
@@ -108,7 +127,6 @@ class Analyzer:
             if cur is None or "=" not in s:
                 continue
             lhs, rhs = s.split("=", 1)
-            opname = lhs.strip().lstrip("%").removeprefix("ROOT ").strip()
             opname = lhs.replace("ROOT", "").strip().lstrip("%")
             rhs = rhs.strip()
             mk = _KIND_RE.search(rhs)
@@ -133,13 +151,11 @@ class Analyzer:
 
             flops = 0.0
             if kind == "dot":
-                # contraction size from lhs operand via the symbol table
                 args = rhs[mk.end():].split(")", 1)[0]
-                ops = [a.strip().lstrip("%") for a in args.split(",")]
+                ldims = _operand_dims(args, 0, symshape)
                 mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
                 contract = 1
-                if mcd and mcd.group(1) and ops:
-                    ldims = symshape.get(ops[0], [])
+                if mcd and mcd.group(1):
                     for ci in mcd.group(1).split(","):
                         ci = int(ci)
                         if ci < len(ldims):
@@ -147,9 +163,11 @@ class Analyzer:
                 flops = 2.0 * out_elems * contract
             elif kind == "convolution":
                 args = rhs[mk.end():].split(")", 1)[0]
-                ops = [a.strip().lstrip("%") for a in args.split(",")]
-                kelems = symtab.get(ops[1], 1) if len(ops) > 1 else 1
-                flops = 2.0 * out_elems * kelems
+                kdims = _operand_dims(args, 1, symshape)
+                kelems = 1
+                for x in kdims:
+                    kelems *= x
+                flops = 2.0 * out_elems * max(kelems, 1)
 
             called = []
             ml = _CALLS_LIST_RE.search(rhs)

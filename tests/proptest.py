@@ -1,0 +1,139 @@
+"""Seeded-numpy property-test shim with a hypothesis fallback.
+
+The seed test-suite hard-imported ``hypothesis``, which is not part of the
+repo's dependency set — collection failed wholesale on a clean machine.
+This module keeps the same test-authoring surface (``@given`` over
+strategies, ``@settings(max_examples=...)``, ``data.draw``) with **zero
+third-party dependencies**: when hypothesis is installed it is used
+verbatim (shrinking, the database, etc.); otherwise a deterministic
+numpy-backed generator produces the same case families.
+
+Shim semantics:
+
+* each test gets a private ``np.random.default_rng`` stream seeded from
+  ``crc32(module.qualname)`` and the example index — runs are reproducible
+  and independent of execution order,
+* ``max_examples`` examples are generated per test (default 10),
+* no shrinking: the failing example's arguments appear in the assertion
+  traceback via pytest's report.
+
+Supported strategies: ``integers``, ``floats``, ``booleans``,
+``sampled_from``, ``lists``, ``data``.
+"""
+
+from __future__ import annotations
+
+try:                                    # opt-in: real hypothesis if present
+    from hypothesis import given, settings       # noqa: F401
+    from hypothesis import strategies as st      # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class Strategy:
+        """A value generator: ``draw(rng) -> value``."""
+
+        def __init__(self, draw_fn, name="strategy"):
+            self._draw = draw_fn
+            self._name = name
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self._name
+
+    class DataObject:
+        """Interactive draws inside a test body (``st.data()``)."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class _DataStrategy(Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: DataObject(rng), "data()")
+
+    class _StrategiesNamespace:
+        """Mimics ``hypothesis.strategies`` for the subset the suite uses."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                f"integers({min_value}, {max_value})")
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                f"floats({min_value}, {max_value})")
+
+        @staticmethod
+        def booleans():
+            return Strategy(lambda rng: bool(rng.integers(2)), "booleans()")
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return Strategy(
+                lambda rng: seq[int(rng.integers(len(seq)))],
+                f"sampled_from({seq!r})")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return Strategy(draw, "lists(...)")
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _StrategiesNamespace()
+
+    def settings(max_examples=10, deadline=None, **_ignored):
+        """Records ``max_examples`` on the (possibly given-wrapped) test."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        """Run the test once per generated example, deterministically."""
+        def deco(fn):
+            base_seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+
+            def wrapper(*args, **kwargs):
+                # @settings may sit above @given (attr lands on wrapper)
+                # or below it (attr lands on fn) — honour both orders
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 10))
+                for example in range(n):
+                    rng = np.random.default_rng([base_seed, example])
+                    drawn = [s.draw(rng) for s in strategies]
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{example} "
+                            f"(seed [{base_seed}, {example}]): "
+                            f"{fn.__qualname__}{tuple(drawn)}") from e
+
+            # Deliberately no functools.wraps: a __wrapped__ attribute
+            # would make pytest introspect the original signature and
+            # treat the strategy parameters as fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,208 @@
+"""Scenario-campaign subsystem: deterministic derivation, metric
+semantics, and equivalence with serial ``Sloth.detect``."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.campaign import (CampaignGrid, DeploymentCache,
+                                 enumerate_scenarios, materialise,
+                                 run_campaign, truth_candidates)
+from repro.core.failures import FailSlow
+from repro.core.graph import build_workload
+from repro.core.metrics import (BinomialStat, aggregate, wilson_interval)
+from repro.core.routing import Mesh2D
+from repro.core.sloth import Sloth
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+SMALL = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                     kinds=("core", "link", "router", "none"),
+                     severities=(8.0,), reps=1, campaign_seed=11)
+
+
+@pytest.fixture(scope="module")
+def small_result():
+    return run_campaign(SMALL, workers=2)
+
+
+# ---------------------------------------------------------------------------
+# grid enumeration + scenario derivation
+# ---------------------------------------------------------------------------
+
+def test_grid_enumeration_counts():
+    g = CampaignGrid(workloads=("darknet19", "binary_tree"), meshes=(4, 6),
+                     kinds=("core", "link", "none"), severities=(5.0, 10.0),
+                     reps=3)
+    scen = enumerate_scenarios(g)
+    assert len(scen) == g.n_scenarios()
+    # 2 wl × 2 mesh × (2 kinds × 2 sev × 3 + 1 none × 3)
+    assert len(scen) == 2 * 2 * (2 * 2 * 3 + 3)
+    assert [s.scenario_id for s in scen] == list(range(len(scen)))
+
+
+def test_grid_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        CampaignGrid(kinds=("core", "gremlin"))
+
+
+def test_scenario_derivation_no_global_rng(small_result):
+    """Materialisation depends only on scenario coordinates: re-deriving
+    any single scenario in isolation reproduces the campaign's draw."""
+    cache = DeploymentCache()
+    for o in small_result.outcomes:
+        s = next(s for s in enumerate_scenarios(SMALL)
+                 if s.scenario_id == o.scenario_id)
+        dep = cache.get(s.workload, s.mesh_w, s.mesh_h)
+        failure, sim_seed = materialise(SMALL, s, dep)
+        assert sim_seed == o.sim_seed
+        if o.kind == "none":
+            assert failure is None
+        else:
+            assert failure.location == o.truth_location
+            assert failure.t0 == o.t0 and failure.duration == o.duration
+            assert failure.slowdown == o.severity
+
+
+def test_campaign_deterministic(small_result):
+    """Same seed → bit-identical outcomes and aggregate metrics, for any
+    worker count."""
+    again = run_campaign(SMALL, workers=1, cache=DeploymentCache())
+    assert again.outcomes == small_result.outcomes
+    assert again.metrics == small_result.metrics
+    assert again.cells == small_result.cells
+
+
+def test_different_seed_differs():
+    g = dataclasses.replace(SMALL, campaign_seed=12, kinds=("core",),
+                            reps=2)
+    a = run_campaign(g, workers=0)
+    b = run_campaign(dataclasses.replace(g, campaign_seed=13), workers=0)
+    assert [o.sim_seed for o in a.outcomes] != [o.sim_seed
+                                                for o in b.outcomes]
+
+
+# ---------------------------------------------------------------------------
+# metric semantics
+# ---------------------------------------------------------------------------
+
+def test_negative_cells_feed_fpr_not_accuracy(small_result):
+    pos = [o for o in small_result.outcomes if o.kind != "none"]
+    neg = [o for o in small_result.outcomes if o.kind == "none"]
+    assert neg and pos
+    m = small_result.metrics
+    assert m.accuracy.trials == len(pos)
+    assert m.fpr.trials == len(neg)
+    # the 'none' cell aggregates to zero accuracy trials
+    none_cells = {c: v for c, v in small_result.cells.items()
+                  if c[3] == "none"}
+    assert none_cells
+    for v in none_cells.values():
+        assert v.accuracy.trials == 0 and v.fpr.trials > 0
+
+
+def test_topk_monotone_in_k(small_result):
+    m = aggregate(small_result.outcomes, ks=(1, 2, 3, 5, 10))
+    rates = [stat.rate for _, stat in m.topk]
+    assert all(a <= b for a, b in zip(rates, rates[1:]))
+    # top-1 agrees with matched-rate at least for core/link truths
+    # (router truths can be matched only via their links)
+    assert m.topk_rate(1) >= m.accuracy.rate - 1e-12
+
+
+def test_wilson_interval_sane():
+    lo, hi = wilson_interval(0, 0)
+    assert (lo, hi) == (0.0, 1.0)
+    lo, hi = wilson_interval(9, 10)
+    assert 0.0 < lo < 0.9 < hi <= 1.0
+    s = BinomialStat(9, 10)
+    assert s.rate == pytest.approx(0.9) and s.interval == (lo, hi)
+
+
+def test_truth_candidates_router_maps_to_links():
+    mesh = Mesh2D(4)
+    f = FailSlow("router", 5, 0.0, 1.0, 8.0)
+    cands = truth_candidates(f, mesh)
+    assert cands == {("link", lid) for lid in mesh.links_of_router(5)}
+    f = FailSlow("core", 5, 0.0, 1.0, 8.0)
+    assert truth_candidates(f, mesh) == {("core", 5)}
+
+
+# ---------------------------------------------------------------------------
+# campaign ≡ serial Sloth.detect
+# ---------------------------------------------------------------------------
+
+def test_campaign_matches_serial_detect(small_result):
+    """The campaign's verdicts are exactly what a serial `Sloth.detect`
+    produces for the same materialised failure and seed."""
+    sloths = {}
+    for o in small_result.outcomes:
+        key = (o.workload, o.mesh_w, o.mesh_h)
+        if key not in sloths:
+            sloths[key] = Sloth(build_workload(o.workload),
+                                Mesh2D(o.mesh_w, o.mesh_h))
+        sloth = sloths[key]
+        failures = None
+        if o.kind != "none":
+            failures = [FailSlow(o.kind, o.truth_location, o.t0,
+                                 o.duration, o.severity)]
+        v = sloth.detect(failures, seed=o.sim_seed)
+        assert bool(v.flagged) == o.flagged
+        assert v.kind == o.pred_kind
+        assert v.location == o.pred_location
+        assert float(v.score) == o.score
+
+
+# ---------------------------------------------------------------------------
+# substrate quality: the detector actually works across the grid
+# ---------------------------------------------------------------------------
+
+def test_campaign_detects_most_injected_failures(small_result):
+    m = small_result.metrics
+    assert m.accuracy.trials >= 3
+    assert m.topk_rate(5) >= 0.5          # truth ranked for most positives
+    assert m.mean_compression > 10
+    assert 0 <= m.mean_probe_overhead < 0.2
+
+
+def test_link_router_placements_use_live_resources(small_result):
+    """Injected link/router failures land on resources the healthy run
+    exercises (paper: unused-resource failures are excluded)."""
+    cache = DeploymentCache()
+    dep = cache.get("darknet19", 4, 4)
+    for o in small_result.outcomes:
+        if o.kind == "link":
+            assert o.truth_location in dep.used_links
+        elif o.kind == "router":
+            assert o.truth_location in dep.used_routers
+
+
+def test_materialise_rejects_unusable_kind():
+    cache = DeploymentCache()
+    dep = dataclasses.replace(cache.get("darknet19", 4, 4),
+                              used_links=(), used_routers=())
+    s = next(s for s in enumerate_scenarios(SMALL) if s.kind == "link")
+    with pytest.raises(ValueError, match="no used links"):
+        materialise(SMALL, s, dep)
+
+
+def test_baselines_judged_router_aware():
+    """Baseline verdicts naming a slowed router's link count as matches
+    (no detector emits kind='router')."""
+    g = dataclasses.replace(SMALL, kinds=("router",), reps=1)
+    res = run_campaign(g, workers=0, baselines=True,
+                       cache=DeploymentCache())
+    (o,) = res.outcomes
+    assert len(o.baseline_results) == 5
+    for name, flagged, matched in o.baseline_results:
+        if matched:                  # a match implies the detector flagged
+            assert flagged
+
+
+def test_deployment_cache_reused():
+    cache = DeploymentCache()
+    a = cache.get("darknet19", 4, 4)
+    b = cache.get("darknet19", 4, 4)
+    assert a is b
+    c = cache.get("darknet19", 4, 4, baselines=True)
+    assert c is not a and len(c.detectors) == 5

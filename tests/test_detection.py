@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, st
 
 from repro.core.detection import em_link_inverse_bw, gamma_sf
 from repro.core.routing import Mesh2D

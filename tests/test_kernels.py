@@ -60,6 +60,100 @@ def test_sketch_kernel_matches_numpy_oracle():
         assert q.count == exp[k].count
 
 
+@pytest.mark.parametrize("d,m,H,L,n", [
+    (1, 32, 2, 8, 300),      # small tables, frequent Stage-2 FIFO evictions
+    (2, 64, 4, 16, 700),
+    (4, 16, 1, 4, 400),      # H=1: every record promotes; L=4: evict-heavy
+    (3, 8, 2, 8, 500),       # heavy Stage-1 bucket collisions
+])
+def test_sketch_batched_matches_scan_ref(d, m, H, L, n):
+    """The vectorized multi-record path is bit-identical to the
+    sequential lax.scan reference on integer state."""
+    from repro.core.sketch import SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O, ref as R
+    p = SketchParams(d=d, m=m, H=H, L=L)
+    rng = np.random.default_rng(7 * d + m)
+    keys = rng.integers(0, 60, size=n).astype(np.int64) * 0x9E3779B9
+    lo, hi = split_key(keys)
+    dur = rng.random(n).astype(np.float32)
+    val = (rng.random(n) * 5).astype(np.float32)
+    t = np.cumsum(rng.random(n)).astype(np.float32)
+    args = tuple(jnp.asarray(x) for x in (lo, hi, dur, val, t))
+    st_r = R.insert_batch(R.make_state(p), *args, H=p.H)
+    st_b = O.insert(O.make_state(p), *args, params=p, impl="batched")
+    for k in st_r:
+        a, b = np.asarray(st_r[k]), np.asarray(st_b[k])
+        if a.dtype.kind == "i":
+            assert np.array_equal(a, b), k
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6,
+                                       err_msg=k)
+
+
+@pytest.mark.parametrize("seed,d,m,H,L", [
+    (0, 2, 64, 4, 16), (1, 1, 16, 2, 4), (2, 3, 32, 8, 8)])
+def test_sketch_batched_matches_numpy_oracle(seed, d, m, H, L):
+    """Algorithm-1 ground truth: random record streams through the numpy
+    oracle vs the vectorized batch path — identical Stage-1 tables and
+    identical live Stage-2 pattern sets (incl. FIFO-eviction victims)."""
+    from repro.core.sketch import FailSlowSketch, SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O
+    p = SketchParams(d=d, m=m, H=H, L=L)
+    rng = np.random.default_rng(seed)
+    n = 600
+    keys = rng.integers(0, 40, size=n).astype(np.int64) * 31337
+    lo, hi = split_key(keys)
+    dur = rng.random(n).astype(np.float32)
+    ts = np.arange(n, dtype=np.float32)
+    oracle = FailSlowSketch(p)
+    oracle.insert_stream(keys, dur, dur * 2, ts.astype(float))
+    st = O.insert(O.make_state(p), jnp.asarray(lo), jnp.asarray(hi),
+                  jnp.asarray(dur), jnp.asarray(dur * 2), jnp.asarray(ts),
+                  params=p, impl="batched")
+    # Stage-1 tables bit-identical
+    assert np.array_equal(np.asarray(st["freq"]), oracle.freq)
+    assert np.array_equal(np.asarray(st["valid"]),
+                          oracle.valid.astype(np.int32))
+    assert np.array_equal(np.asarray(st["keys_lo"]) * np.asarray(st["valid"]),
+                          oracle.keys_lo * oracle.valid)
+    # live Stage-2 patterns identical (key set, counts, arrival order)
+    pats = {q.key: q for q in O.patterns(st)}
+    assert set(pats) == set(int(k) for k in oracle.stage2)
+    for k, q in pats.items():
+        exp = oracle.stage2[k]
+        assert q.count == exp.count
+        assert q.arrival == exp.arrival
+        assert q.sum_dur == pytest.approx(exp.sum_dur, rel=1e-5)
+        assert q.min_dur == pytest.approx(exp.min_dur, rel=1e-6)
+    if L <= 8:
+        assert oracle.n_evicted > 0      # the stream exercised eviction
+
+
+def test_sketch_batched_promotion_and_evict_edges():
+    """Deterministic Stage-1/Stage-2 edge cases: promotion exactly at H,
+    decrement-clear-claim of a contested bucket, FIFO eviction order."""
+    from repro.core.sketch import FailSlowSketch, SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O
+    p = SketchParams(d=1, m=1, H=3, L=2)     # one bucket: force the races
+    # key 7 ×3 (promotes at freq 3), key 9 ×6 (3 decrements clear the
+    # bucket, 3 claims re-promote), key 5 ×6 (same dance) → the third
+    # Stage-2 pattern FIFO-evicts the oldest (key 7)
+    keys = np.array([7] * 3 + [9] * 6 + [5] * 6, dtype=np.int64)
+    lo, hi = split_key(keys)
+    n = len(keys)
+    dur = np.full(n, 0.5, np.float32)
+    ts = np.arange(n, dtype=np.float32)
+    oracle = FailSlowSketch(p)
+    oracle.insert_stream(keys, dur, dur, ts.astype(float))
+    st = O.insert(O.make_state(p), jnp.asarray(lo), jnp.asarray(hi),
+                  jnp.asarray(dur), jnp.asarray(dur), jnp.asarray(ts),
+                  params=p, impl="batched")
+    assert np.array_equal(np.asarray(st["freq"]), oracle.freq)
+    live = {q.key: q.count for q in O.patterns(st)}
+    assert live == {int(k): v.count for k, v in oracle.stage2.items()}
+    assert oracle.n_evicted == 1 and 7 not in live   # FIFO victim
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

@@ -3,7 +3,7 @@ jnp/Pallas parity, and the Lemma 3.1 retention bound."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, st
 
 from repro.core.sketch import (FailSlowSketch, SketchParams,
                                retention_lower_bound, split_key)
