@@ -285,34 +285,69 @@ def bench_failrank_convergence():
 # ---------------------------------------------------------------------------
 
 def bench_scalability(n_samples=None):
-    """Campaign-driven Figs 16/17: the same grid evaluated at 4×4, 6×6 and
-    8×8, with deployment artifacts (healthy run, probe-overhead
-    calibration) served from the campaign's deployment cache."""
+    """Campaign-driven Figs 16/17: the same grid evaluated at 4×4, 6×6,
+    8×8 and a rectangular 8×4, with deployment artifacts (healthy run,
+    probe-overhead calibration) served from the campaign's deployment
+    cache."""
     n_samples = n_samples or (20 if FULL else 8)
     reps = max(2, n_samples // 2)
     workloads = ("resnet50", "darknet19")
     rows = []
     cache = C.DeploymentCache()
-    for w in (4, 6, 8):
-        grid = C.CampaignGrid(workloads=workloads, meshes=(w,),
+    for w, h in ((4, 4), (6, 6), (8, 8), (8, 4)):
+        grid = C.CampaignGrid(workloads=workloads, meshes=((w, h),),
                               kinds=("core", "link"), severities=(10.0,),
                               reps=reps, campaign_seed=3)
         res = C.run_campaign(grid, cache=cache)
         for wl in workloads:
-            dep = cache.get(wl, w, w)
+            dep = cache.get(wl, w, h)
             sub = [o for o in res.outcomes if o.workload == wl]
             m = M.aggregate(sub)
-            rows.append((f"fig16_{wl}_{w}x{w}_total_s", 0.0,
+            rows.append((f"fig16_{wl}_{w}x{h}_total_s", 0.0,
                          round(dep.healthy.total_time, 2)))
-            rows.append((f"fig16_{wl}_{w}x{w}_full_probe_pct", 0.0,
+            rows.append((f"fig16_{wl}_{w}x{h}_full_probe_pct", 0.0,
                          round(dep.probe_overhead * 100, 3)))
-            rows.append((f"fig17_{wl}_{w}x{w}_compression_x", 0.0,
+            rows.append((f"fig17_{wl}_{w}x{h}_compression_x", 0.0,
                          round(m.mean_compression, 1)))
-            rows.append((f"fig17_{wl}_{w}x{w}_acc_pct", 0.0,
+            rows.append((f"fig17_{wl}_{w}x{h}_acc_pct", 0.0,
                          round(m.accuracy.pct(), 1)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# multi-failure campaigns: any-match accuracy + per-failure recall@k
+# ---------------------------------------------------------------------------
+
+def bench_multi_failure(n_samples=None):
+    """Simultaneous-failure scenarios (the grid's ``n_failures`` axis):
+    any-match accuracy and failure-level recall@k as k grows — gray-failure
+    fleet studies report fail-slow events co-occurring, so this measures
+    how gracefully localisation degrades with k."""
+    n_samples = n_samples or (16 if FULL else 6)
+    reps = max(2, n_samples // 2)
+    rows = []
+    # pre-build the deployment so the timed region covers scenario
+    # execution only (same convention as bench_accuracy)
+    cache = C.DeploymentCache()
+    cache.get("darknet19", 4, 4)
+    for nf in (1, 2, 3):
+        grid = C.CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                              kinds=("core", "link"), severities=(10.0,),
+                              n_failures=(nf,), reps=reps, campaign_seed=5)
+        t0 = time.perf_counter()
+        res = C.run_campaign(grid, cache=cache, workers=1)
+        us = ((time.perf_counter() - t0)
+              / max(len(res.outcomes), 1) * 1e6)
+        m = res.metrics
+        rows.append((f"multifail_k{nf}_acc_anymatch_pct", round(us, 1),
+                     round(m.accuracy.pct(), 2)))
+        rows.append((f"multifail_k{nf}_recall_at1_pct", 0.0,
+                     round(m.recall_at(1) * 100, 2)))
+        rows.append((f"multifail_k{nf}_recall_at5_pct", 0.0,
+                     round(m.recall_at(5) * 100, 2)))
     return rows
 
 
 ALL = [bench_impact, bench_accuracy, bench_probe_overhead, bench_storage,
        bench_sketch_params, bench_dse, bench_failrank_convergence,
-       bench_scalability]
+       bench_scalability, bench_multi_failure]

@@ -1,12 +1,16 @@
 """Scenario-campaign sweep: reproduce the paper's aggregate metrics.
 
 Runs a grid of fail-slow scenarios (workload × mesh × failure kind ×
-severity × replicate) through the SLOTH pipeline and prints per-cell and
-campaign-level accuracy / FPR / top-k localisation / compression / probe
-overhead, with Wilson confidence intervals.
+severity × n_failures × replicate) through the SLOTH pipeline and prints
+per-cell and campaign-level accuracy / FPR / top-k localisation /
+recall@k / compression / probe overhead, with Wilson confidence intervals.
 
     PYTHONPATH=src python examples/campaign_sweep.py            # full grid
     PYTHONPATH=src python examples/campaign_sweep.py --tiny     # CI smoke
+    PYTHONPATH=src python examples/campaign_sweep.py \\
+        --tiny --executor process --n-failures 2                # multi-core
+    PYTHONPATH=src python examples/campaign_sweep.py \\
+        --mesh 12x12 --mesh 16x8 --executor process             # big meshes
 """
 
 import argparse
@@ -20,16 +24,19 @@ from repro.core.campaign import CampaignGrid, run_campaign  # noqa: E402
 
 
 def make_grid(args) -> CampaignGrid:
+    n_failures = tuple(args.n_failures) if args.n_failures else (1,)
     if args.tiny:
-        return CampaignGrid(workloads=("darknet19",), meshes=(4,),
+        return CampaignGrid(workloads=("darknet19",),
+                            meshes=tuple(args.mesh) if args.mesh else (4,),
                             kinds=("core", "link", "router", "none"),
-                            severities=(8.0,), reps=1,
-                            campaign_seed=args.seed)
+                            severities=(8.0,), n_failures=n_failures,
+                            reps=1, campaign_seed=args.seed)
     return CampaignGrid(
         workloads=("darknet19", "googlenet", "binary_tree"),
-        meshes=(4, 6),
+        meshes=tuple(args.mesh) if args.mesh else (4, 6),
         kinds=("core", "link", "router", "none"),
         severities=(5.0, 10.0),
+        n_failures=n_failures,
         reps=2,
         campaign_seed=args.seed,
     )
@@ -41,15 +48,28 @@ def main(argv=None) -> int:
                     help="minimal smoke grid (4 scenarios)")
     ap.add_argument("--seed", type=int, default=0, help="campaign seed")
     ap.add_argument("--workers", type=int, default=None,
-                    help="thread-pool width (default: cpu count)")
+                    help="pool width (default: cpu count)")
+    ap.add_argument("--executor", choices=("thread", "process"),
+                    default="thread",
+                    help="scenario dispatch: GIL-bound thread pool or "
+                         "true multi-core process pool (bit-identical "
+                         "results either way)")
+    ap.add_argument("--n-failures", type=int, action="append", default=None,
+                    metavar="K", help="simultaneous-failure axis entry "
+                    "(repeatable, e.g. --n-failures 1 --n-failures 2)")
+    ap.add_argument("--mesh", action="append", default=None, metavar="WxH",
+                    help="mesh axis entry, 'W' or 'WxH' "
+                         "(repeatable, e.g. --mesh 12x12 --mesh 16x8)")
     args = ap.parse_args(argv)
 
     grid = make_grid(args)
     n = grid.n_scenarios()
     print(f"campaign: {len(grid.workloads)} workloads × "
           f"{len(grid.meshes)} meshes × {len(grid.kinds)} kinds × "
-          f"{len(grid.severities)} severities × {grid.reps} reps "
-          f"= {n} scenarios (seed {grid.campaign_seed})")
+          f"{len(grid.severities)} severities × "
+          f"{len(grid.n_failures)} n_failures × {grid.reps} reps "
+          f"= {n} scenarios (seed {grid.campaign_seed}, "
+          f"executor {args.executor})")
 
     done = []
 
@@ -59,18 +79,20 @@ def main(argv=None) -> int:
             print(f"  ... {len(done)}/{n} scenarios", flush=True)
 
     t0 = time.perf_counter()
-    res = run_campaign(grid, workers=args.workers, progress=progress)
+    res = run_campaign(grid, workers=args.workers, executor=args.executor,
+                       progress=progress)
     wall = time.perf_counter() - t0
 
-    print(f"\n== per-cell (workload, mesh, kind, severity) ==")
-    for (wl, w, h, kind, sev), m in res.cells.items():
+    print(f"\n== per-cell (workload, mesh, kind, severity, n_failures) ==")
+    for (wl, w, h, kind, sev, nf), m in res.cells.items():
         if kind == "none":
             stat = f"FPR {m.fpr.pct():6.2f}% ({m.fpr.successes}/{m.fpr.trials})"
         else:
             stat = (f"acc {m.accuracy.pct():6.2f}% "
                     f"({m.accuracy.successes}/{m.accuracy.trials}) "
-                    f"top3 {m.topk_rate(3)*100:6.2f}%")
-        print(f"  {wl:12s} {w}x{h} {kind:6s} x{sev:<5.1f} {stat}")
+                    f"top3 {m.topk_rate(3)*100:6.2f}% "
+                    f"recall@3 {m.recall_at(3)*100:6.2f}%")
+        print(f"  {wl:12s} {w}x{h} {kind:6s} x{sev:<5.1f} k={nf} {stat}")
 
     print(f"\n== campaign aggregate ==")
     print(res.summary())

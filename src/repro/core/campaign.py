@@ -9,57 +9,113 @@ Scenario-grid schema
 --------------------
 A :class:`CampaignGrid` is the cross product
 
-    workload × mesh size × failure kind × severity × replicate
+    workload × mesh × failure kind × severity × n_failures × replicate
 
-with ``kind ∈ {'core', 'link', 'router', 'none'}``.  ``'none'`` cells are
-negative (failure-free) samples and collapse the severity axis — they are
-enumerated once per replicate with ``severity = 0.0``.  Every scenario is
-fully determined by ``(campaign_seed, workload, mesh, kind, severity,
-rep)``: locations, onset time, duration and the simulator seed are drawn
-from a private ``numpy`` generator keyed on exactly that tuple
-(``np.random.default_rng([...])``), so there is **no global RNG state** and
-the same grid always materialises bit-identical scenarios, regardless of
-worker count or execution order.
+with ``kind ∈ {'core', 'link', 'router', 'none'}``.  Mesh entries may be a
+square width ``W``, a ``(W, H)`` pair or a ``'WxH'`` string — they are
+normalised to ``(W, H)`` tuples at grid construction, so rectangular meshes
+(``12×8``, ``16×8``, …) flow through scenario keys, cache keys and metric
+cells unchanged.  ``n_failures`` entries are k ≥ 1 *simultaneous* failures
+of the scenario's kind at k distinct locations (ground truth becomes a set;
+see ``metrics.py`` for any-match accuracy and per-failure recall@k).
+``'none'`` cells are negative (failure-free) samples and collapse both the
+severity and n_failures axes — they are enumerated once per replicate with
+``severity = 0.0`` and ``n_failures = 0``.
+
+Every scenario is fully determined by ``(campaign_seed, workload, mesh,
+kind, severity, n_failures, rep)``: locations, onset times, durations and
+the simulator seed are drawn from a private ``numpy`` generator keyed on
+exactly that tuple (``np.random.default_rng([...])``), so there is **no
+global RNG state** and the same grid always materialises bit-identical
+scenarios, regardless of worker count, executor or execution order.
 
 Link/router placements are restricted to resources the healthy run actually
 exercises (the paper: "failures occurring on unused resources are
 excluded"), using the deployment's cached healthy simulation.
 
-Metric definitions
-------------------
-See ``metrics.py``: accuracy = matched-top-1 rate over positives (router
-truths accept any link of the slowed router, since localisation is at link
-granularity); FPR = flagged rate over negatives; top-k = truth within the
-first k ranking entries; compression ratio and probe overhead are averaged.
-Binomial rates carry Wilson intervals.
+Execution model
+---------------
+``run_campaign(..., workers=N, executor='thread'|'process')``:
+
+* ``executor='thread'`` (default) — deployments are built serially into the
+  shared :class:`DeploymentCache`, then scenarios fan out over a thread
+  pool.  Fine for small grids; the pure-Python simulator holds the GIL, so
+  threads mostly pipeline rather than parallelise.
+* ``executor='process'`` — scenarios are dispatched to a
+  ``ProcessPoolExecutor``.  Only the picklable ``(grid, scenario, config)``
+  coordinates cross the process boundary; each worker process lazily
+  rebuilds the deployments it needs into its own module-level
+  :class:`DeploymentCache` (deployment construction is deterministic, so a
+  rebuilt deployment is identical to the parent's).  A ``cache=`` argument
+  is not consulted on this path.  Outcomes are collected in scenario order
+  and are **bit-identical** to serial/thread execution for any worker
+  count.
+
+``workers=None`` → cpu count; ``0``/``1`` or a single-scenario grid →
+serial in-process execution for either executor.
 
 Performance
 -----------
 ``(workload, mesh, config)`` deployments — mapped graph, probe plan,
 healthy simulation, probe-overhead calibration, optional baseline
-detectors — are built once and cached (:class:`DeploymentCache`), then
-shared read-only by all scenarios of the grid.  Independent scenarios are
-dispatched through a thread pool (``workers=``); results are collected by
-scenario index so ordering and aggregates are reproducible.
+detectors — are built once per cache (:class:`DeploymentCache`) and shared
+read-only by all scenarios of the grid.  The cache key normalises
+``cfg=None`` to the default :class:`SlothConfig`, so explicit-default and
+implicit-default callers share one deployment.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import multiprocessing
 import os
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 
 import numpy as np
 
 from . import baselines as B
-from .failures import FailSlow
+from .failures import FailSlow, truth_candidates
 from .graph import build_workload
-from .metrics import (CampaignMetrics, ScenarioOutcome, aggregate, by_cell)
+from .metrics import (CampaignMetrics, ScenarioOutcome, aggregate, by_cell,
+                      deployment_overheads)
 from .routing import Mesh2D
 from .simulator import SimResult, simulate
 from .sloth import Sloth, SlothConfig, Verdict
 
+__all__ = [
+    "KINDS", "EXECUTORS", "CampaignGrid", "Scenario", "Deployment",
+    "DeploymentCache", "CampaignResult", "enumerate_scenarios",
+    "materialise", "run_scenario", "run_campaign", "truth_candidates",
+]
+
 KINDS = ("core", "link", "router", "none")
+EXECUTORS = ("thread", "process")
+
+
+def _mesh_dims(mesh) -> tuple[int, int]:
+    """Normalise a mesh spec — ``12`` | ``(12, 8)`` | ``'12x8'`` — to
+    ``(width, height)``."""
+    if isinstance(mesh, str):
+        parts = mesh.lower().split("x")
+        if len(parts) == 1:
+            parts = parts * 2
+        if len(parts) != 2 or not all(p.strip().isdigit() for p in parts):
+            raise ValueError(f"bad mesh spec {mesh!r}: use 'W' or 'WxH'")
+        w, h = (int(p) for p in parts)
+    elif isinstance(mesh, (int, np.integer)):
+        w = h = int(mesh)
+    else:
+        try:
+            if len(mesh) != 2:
+                raise ValueError
+            w, h = int(mesh[0]), int(mesh[1])
+        except (TypeError, ValueError):
+            raise ValueError(f"bad mesh spec {mesh!r}: use W, (W, H) "
+                             f"or 'WxH'") from None
+    if w < 1 or h < 1:
+        raise ValueError(f"mesh dimensions must be >= 1, got {w}x{h}")
+    return w, h
 
 
 # ---------------------------------------------------------------------------
@@ -70,9 +126,10 @@ KINDS = ("core", "link", "router", "none")
 class CampaignGrid:
     """Declarative scenario grid (see module docstring for the schema)."""
     workloads: tuple[str, ...] = ("darknet19",)
-    meshes: tuple[int, ...] = (4,)          # square mesh widths
+    meshes: tuple = (4,)                     # W | (W, H) | 'WxH' entries
     kinds: tuple[str, ...] = KINDS
     severities: tuple[float, ...] = (10.0,)
+    n_failures: tuple[int, ...] = (1,)       # simultaneous failures axis
     reps: int = 1                            # replicates per grid cell
     campaign_seed: int = 0
     max_t0_frac: float = 0.5                 # onset within healthy runtime
@@ -84,9 +141,16 @@ class CampaignGrid:
             raise ValueError(f"unknown failure kinds: {sorted(bad)}")
         if self.reps < 1:
             raise ValueError("reps must be >= 1")
+        if not self.n_failures or any(int(k) < 1 for k in self.n_failures):
+            raise ValueError("n_failures entries must be >= 1")
+        object.__setattr__(self, "meshes",
+                           tuple(_mesh_dims(m) for m in self.meshes))
+        object.__setattr__(self, "n_failures",
+                           tuple(int(k) for k in self.n_failures))
 
     def n_scenarios(self) -> int:
         per_deploy = sum(self.reps * (len(self.severities)
+                                      * len(self.n_failures)
                                       if k != "none" else 1)
                          for k in self.kinds)
         return len(self.workloads) * len(self.meshes) * per_deploy
@@ -94,14 +158,16 @@ class CampaignGrid:
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One fully-enumerated grid point (location not yet materialised —
-    that needs the deployment's used-resource sets)."""
+    """One fully-enumerated grid point (locations not yet materialised —
+    that needs the deployment's used-resource sets).  Picklable, so it can
+    be shipped to process-pool workers."""
     scenario_id: int
     workload: str
     mesh_w: int
     mesh_h: int
     kind: str
     severity: float
+    n_failures: int        # 0 for 'none' scenarios
     rep: int
 
 
@@ -109,13 +175,15 @@ def enumerate_scenarios(grid: CampaignGrid) -> list[Scenario]:
     """Fixed nested-loop enumeration; scenario_id is the stable index."""
     out: list[Scenario] = []
     for wl in grid.workloads:
-        for w in grid.meshes:
+        for w, h in grid.meshes:
             for kind in grid.kinds:
                 sevs = (0.0,) if kind == "none" else grid.severities
+                nfs = (0,) if kind == "none" else grid.n_failures
                 for sev in sevs:
-                    for rep in range(grid.reps):
-                        out.append(Scenario(len(out), wl, w, w, kind,
-                                            sev, rep))
+                    for nf in nfs:
+                        for rep in range(grid.reps):
+                            out.append(Scenario(len(out), wl, w, h, kind,
+                                                sev, nf, rep))
     return out
 
 
@@ -125,7 +193,7 @@ def _scenario_rng(grid: CampaignGrid, s: Scenario) -> np.random.Generator:
     wl_key = int.from_bytes(s.workload.encode()[:8].ljust(8, b"\0"), "big")
     return np.random.default_rng(
         [grid.campaign_seed, wl_key, s.mesh_w, s.mesh_h,
-         KINDS.index(s.kind), int(s.severity * 1000), s.rep])
+         KINDS.index(s.kind), int(s.severity * 1000), s.n_failures, s.rep])
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +216,9 @@ class DeploymentCache:
 
     Construction is the expensive part of the grid (graph build, mapping,
     probe planning, healthy calibration run); caching it means adding
-    scenarios to a campaign costs one simulate+analyse each.
+    scenarios to a campaign costs one simulate+analyse each.  ``cfg=None``
+    is normalised to the default ``SlothConfig()`` before keying, so both
+    spellings share one deployment.
     """
 
     HEALTHY_SEED = 999
@@ -159,6 +229,7 @@ class DeploymentCache:
     def get(self, workload: str, mesh_w: int, mesh_h: int,
             cfg: SlothConfig | None = None,
             baselines: bool = False) -> Deployment:
+        cfg = cfg if cfg is not None else SlothConfig()
         key = (workload, mesh_w, mesh_h, repr(cfg), baselines)
         dep = self._cache.get(key)
         if dep is None:
@@ -169,8 +240,8 @@ class DeploymentCache:
             for s, d in zip(healthy.comm["src"], healthy.comm["dst"]):
                 if s != d:
                     used.update(sloth.mesh.route(int(s), int(d)))
-            import dataclasses as dc
-            probed_cfg = dc.replace(sloth.sim_cfg, seed=self.HEALTHY_SEED)
+            probed_cfg = dataclasses.replace(sloth.sim_cfg,
+                                             seed=self.HEALTHY_SEED)
             t_none = simulate(sloth.mapped, probed_cfg,
                               probes=None).total_time
             t_full = simulate(sloth.mapped, probed_cfg,
@@ -189,22 +260,36 @@ class DeploymentCache:
 
 _DEFAULT_CACHE = DeploymentCache()
 
+# Per-worker-process cache for ``executor='process'``: each worker rebuilds
+# the deployments it needs lazily (construction is deterministic, so the
+# rebuild is identical to the parent's deployment).
+_WORKER_CACHE = DeploymentCache()
+
 
 # ---------------------------------------------------------------------------
 # materialisation + single-scenario execution
 # ---------------------------------------------------------------------------
 
 def materialise(grid: CampaignGrid, s: Scenario, dep: Deployment) \
-        -> tuple[FailSlow | None, int]:
-    """Derive (failure, sim_seed) for one scenario — deterministic in the
-    scenario coordinates and the deployment's healthy run."""
+        -> tuple[tuple[FailSlow, ...], int]:
+    """Derive (failures, sim_seed) for one scenario — deterministic in the
+    scenario coordinates and the deployment's healthy run.  ``'none'``
+    scenarios yield an empty failure tuple; positive scenarios yield
+    ``s.n_failures`` simultaneous failures of ``s.kind`` at distinct
+    locations, each with its own onset and duration."""
     rng = _scenario_rng(grid, s)
     sim_seed = int(rng.integers(1 << 31))
     if s.kind == "none":
-        return None, sim_seed
+        return (), sim_seed
     mesh = dep.sloth.mesh
+    k = s.n_failures
     if s.kind == "core":
-        loc = int(rng.integers(mesh.n_cores))
+        if k > mesh.n_cores:
+            raise ValueError(
+                f"cannot place {k} distinct core failures on a "
+                f"{mesh.n_cores}-core {s.mesh_w}x{s.mesh_h} mesh")
+        locs = [int(c) for c in rng.choice(mesh.n_cores, size=k,
+                                           replace=False)]
     else:            # link/router — only resources carrying traffic
         pool = dep.used_links if s.kind == "link" else dep.used_routers
         if not pool:
@@ -213,56 +298,62 @@ def materialise(grid: CampaignGrid, s: Scenario, dep: Deployment) \
                 f"{s.mesh_w}x{s.mesh_h}: the healthy run has no "
                 f"cross-core traffic, so a {s.kind} fail-slow cannot "
                 f"affect execution — drop this kind from the grid")
-        loc = int(pool[int(rng.integers(len(pool)))])
+        if k > len(pool):
+            raise ValueError(
+                f"cannot place {k} distinct {s.kind} failures: only "
+                f"{len(pool)} used {s.kind}s on {s.workload}@"
+                f"{s.mesh_w}x{s.mesh_h}")
+        locs = [int(pool[int(i)]) for i in rng.choice(len(pool), size=k,
+                                                      replace=False)]
     total = dep.healthy.total_time
-    t0 = float(rng.uniform(0.0, grid.max_t0_frac * total))
-    dur = float(rng.uniform(grid.min_dur_frac, 1.0) * total)
-    return FailSlow(s.kind, loc, t0, dur, s.severity), sim_seed
+    failures = []
+    for loc in locs:
+        t0 = float(rng.uniform(0.0, grid.max_t0_frac * total))
+        dur = float(rng.uniform(grid.min_dur_frac, 1.0) * total)
+        failures.append(FailSlow(s.kind, loc, t0, dur, s.severity))
+    return tuple(failures), sim_seed
 
 
-def truth_candidates(failure: FailSlow, mesh: Mesh2D) \
-        -> set[tuple[str, int]]:
-    """Acceptable (kind, location) verdicts for an injected failure.  The
-    detector localises at core/link granularity, so a router failure is
-    correctly localised by naming any link of the slowed router."""
-    if failure.kind == "router":
-        return {("link", lid)
-                for lid in mesh.links_of_router(failure.location)}
-    return {(failure.kind, failure.location)}
-
-
-def _judge(verdict: Verdict, failure: FailSlow | None, mesh: Mesh2D) \
-        -> tuple[bool, int | None]:
-    """(matched, truth_rank) for a verdict against ground truth."""
-    if failure is None:
-        return (not verdict.flagged), None
-    cands = truth_candidates(failure, mesh)
-    rank = None
-    for i, (k, l, _) in enumerate(verdict.ranking):
-        if (k, l) in cands:
-            rank = i + 1
-            break
-    matched = bool(verdict.flagged
-                   and (verdict.kind, verdict.location) in cands)
-    return matched, rank
+def _judge(verdict: Verdict, failures: tuple[FailSlow, ...], mesh: Mesh2D) \
+        -> tuple[bool, int | None, tuple, set[tuple[str, int]]]:
+    """(matched, best_rank, per_failure_ranks, candidate_union) for a
+    verdict against a set of ground truths.  Matching delegates to the
+    shared router-aware rule (``Verdict.matches`` / ``truth_candidates``):
+    matched means the top-1 verdict names *any* injected truth; ranks are
+    1-based positions of each truth in the ranking (``None`` when
+    unranked); the union of acceptable (kind, location) answers is
+    returned so callers can score other detectors by the same rule."""
+    if not failures:
+        return (not verdict.flagged), None, (), set()
+    ranks: list[int | None] = []
+    union: set[tuple[str, int]] = set()
+    for f in failures:
+        cands = truth_candidates(f, mesh)
+        union |= cands
+        rank = None
+        for i, (k, l, _) in enumerate(verdict.ranking):
+            if (k, l) in cands:
+                rank = i + 1
+                break
+        ranks.append(rank)
+    matched = any(verdict.matches(f, mesh) for f in failures)
+    ranked = [r for r in ranks if r is not None]
+    return matched, (min(ranked) if ranked else None), tuple(ranks), union
 
 
 def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
         -> ScenarioOutcome:
     """Execute one scenario end-to-end against a cached deployment."""
-    failure, sim_seed = materialise(grid, s, dep)
-    sim = dep.sloth.run([failure] if failure else None, seed=sim_seed)
+    failures, sim_seed = materialise(grid, s, dep)
+    sim = dep.sloth.run(list(failures) if failures else None, seed=sim_seed)
     v = dep.sloth.analyse(sim)
-    matched, rank = _judge(v, failure, dep.sloth.mesh)
-    cands = (truth_candidates(failure, dep.sloth.mesh)
-             if failure is not None else None)
+    matched, rank, ranks, cands = _judge(v, failures, dep.sloth.mesh)
     bl = []
     for det in dep.detectors:
         bv = det.detect(sim)
-        # judge baselines with the same router-aware rule as SLOTH
-        # (BaselineVerdict.matches would score every router scenario as
-        # a miss, since no detector emits kind='router')
-        if failure is None:
+        # judge baselines with the same router-aware any-match rule as
+        # SLOTH (no baseline emits kind='router' either)
+        if not failures:
             ok = not bv.flagged
         else:
             ok = bool(bv.flagged and (bv.kind, bv.location) in cands)
@@ -270,17 +361,28 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
     return ScenarioOutcome(
         scenario_id=s.scenario_id, workload=s.workload,
         mesh_w=s.mesh_w, mesh_h=s.mesh_h, kind=s.kind,
-        severity=s.severity, rep=s.rep, sim_seed=sim_seed,
-        truth_location=failure.location if failure else None,
-        t0=failure.t0 if failure else None,
-        duration=failure.duration if failure else None,
+        severity=s.severity, n_failures=len(failures), rep=s.rep,
+        sim_seed=sim_seed,
+        truth_locations=tuple(f.location for f in failures),
+        truth_t0s=tuple(f.t0 for f in failures),
+        truth_durations=tuple(f.duration for f in failures),
         flagged=bool(v.flagged), pred_kind=v.kind,
         pred_location=v.location, score=float(v.score),
-        matched=matched, truth_rank=rank,
+        matched=matched, truth_rank=rank, truth_ranks=ranks,
         compression_ratio=float(v.recorder.compression_ratio),
         total_time=float(v.total_time),
+        probe_overhead=float(dep.probe_overhead),
         baseline_results=tuple(bl),
     )
+
+
+def _run_in_worker(grid: CampaignGrid, cfg: SlothConfig | None,
+                   baselines: bool, s: Scenario) -> ScenarioOutcome:
+    """Process-pool entry point: resolve the deployment from this worker
+    process's own cache (lazily built), then run the scenario."""
+    dep = _WORKER_CACHE.get(s.workload, s.mesh_w, s.mesh_h,
+                            cfg=cfg, baselines=baselines)
+    return run_scenario(grid, s, dep)
 
 
 # ---------------------------------------------------------------------------
@@ -310,54 +412,81 @@ class CampaignResult:
         ] + [
             f"top-{k}:     {stat.pct():.2f}%" for k, stat in m.topk
         ] + [
+            f"recall@{k}:  {stat.pct():.2f}% "
+            f"({stat.successes}/{stat.trials})" for k, stat in m.recall
+        ] + [
             f"compression: {m.mean_compression:.1f}x",
-            f"probe overhead: {m.mean_probe_overhead*100:.3f}%",
+            f"probe overhead: {m.mean_probe_overhead*100:.3f}% "
+            f"(scenario-weighted; unweighted per-deployment "
+            f"{m.mean_probe_overhead_unweighted*100:.3f}%)",
         ]
         return "\n".join(lines)
 
 
 def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
+                 executor: str = "thread",
                  cfg: SlothConfig | None = None, baselines: bool = False,
                  cache: DeploymentCache | None = None,
                  progress=None) -> CampaignResult:
     """Run every scenario of ``grid`` and aggregate paper-style metrics.
 
-    ``workers`` — thread-pool width (``None`` → cpu count, ``0``/``1`` →
-    serial).  Results are identical for any worker count.  ``baselines``
-    additionally runs the five baseline detectors on each scenario's trace.
-    ``cache`` — share deployments across campaigns (defaults to a
-    process-wide cache).
+    ``workers`` — pool width (``None`` → cpu count, ``0``/``1`` → serial).
+    ``executor`` — ``'thread'`` (shared deployments, GIL-bound) or
+    ``'process'`` (per-worker deployment caches, true multi-core; see the
+    module docstring).  Outcomes are **bit-identical** across executors and
+    worker counts.  ``baselines`` additionally runs the five baseline
+    detectors on each scenario's trace.  ``cache`` — share deployments
+    across campaigns (defaults to a process-wide cache; ignored by
+    process-pool workers, which keep their own).
     """
-    cache = cache if cache is not None else _DEFAULT_CACHE
+    if executor not in EXECUTORS:
+        raise ValueError(f"unknown executor {executor!r}; "
+                         f"options: {EXECUTORS}")
     scenarios = enumerate_scenarios(grid)
-
-    # Build deployments serially first: construction is the expensive,
-    # cache-mutating step; scenario execution then only reads shared state.
-    deps: dict[tuple, Deployment] = {}
-    for s in scenarios:
-        k = (s.workload, s.mesh_w, s.mesh_h)
-        if k not in deps:
-            deps[k] = cache.get(s.workload, s.mesh_w, s.mesh_h,
-                                cfg=cfg, baselines=baselines)
-
-    def run_one(s: Scenario) -> ScenarioOutcome:
-        o = run_scenario(grid, s, deps[(s.workload, s.mesh_w, s.mesh_h)])
-        if progress is not None:
-            progress(o)
-        return o
-
     workers = (os.cpu_count() or 1) if workers is None else workers
-    if workers > 1 and len(scenarios) > 1:
-        with ThreadPoolExecutor(max_workers=workers) as pool:
-            outcomes = list(pool.map(run_one, scenarios))
-    else:
-        outcomes = [run_one(s) for s in scenarios]
+    parallel = workers > 1 and len(scenarios) > 1
 
-    overheads = {k: d.probe_overhead for k, d in deps.items()}
-    mean_ov = sum(overheads.values()) / len(overheads) if overheads else 0.0
+    if executor == "process" and parallel:
+        # spawn, not fork: the analysis pipeline jits through JAX, whose
+        # thread pools make fork() after first use prone to deadlock.
+        # Workers re-import the package cleanly (sys.path is inherited).
+        ctx = multiprocessing.get_context("spawn")
+        fn = functools.partial(_run_in_worker, grid, cfg, baselines)
+        outcomes = []
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=ctx) as pool:
+            for o in pool.map(fn, scenarios):
+                if progress is not None:
+                    progress(o)
+                outcomes.append(o)
+    else:
+        cache = cache if cache is not None else _DEFAULT_CACHE
+        # Build deployments serially first: construction is the expensive,
+        # cache-mutating step; scenario execution then only reads shared
+        # state.
+        deps: dict[tuple, Deployment] = {}
+        for s in scenarios:
+            k = (s.workload, s.mesh_w, s.mesh_h)
+            if k not in deps:
+                deps[k] = cache.get(s.workload, s.mesh_w, s.mesh_h,
+                                    cfg=cfg, baselines=baselines)
+
+        def run_one(s: Scenario) -> ScenarioOutcome:
+            o = run_scenario(grid, s,
+                             deps[(s.workload, s.mesh_w, s.mesh_h)])
+            if progress is not None:
+                progress(o)
+            return o
+
+        if parallel:
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                outcomes = list(pool.map(run_one, scenarios))
+        else:
+            outcomes = [run_one(s) for s in scenarios]
+
     return CampaignResult(
         grid=grid, outcomes=outcomes,
-        metrics=aggregate(outcomes, probe_overhead=mean_ov),
+        metrics=aggregate(outcomes),
         cells=by_cell(outcomes),
-        probe_overheads=overheads,
+        probe_overheads=deployment_overheads(outcomes),
     )

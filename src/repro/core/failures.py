@@ -27,6 +27,20 @@ class FailSlow:
         return (self.kind, self.location)
 
 
+def truth_candidates(failure: FailSlow, mesh: Mesh2D) \
+        -> set[tuple[str, int]]:
+    """Acceptable (kind, location) verdicts for an injected failure.
+
+    This is the single router-aware judging rule shared by
+    ``Verdict.matches``, the campaign judge and the baseline scoring: the
+    detector localises at core/link granularity, so a router failure is
+    correctly localised by naming any link of the slowed router."""
+    if failure.kind == "router":
+        return {("link", lid)
+                for lid in mesh.links_of_router(failure.location)}
+    return {(failure.kind, failure.location)}
+
+
 @dataclasses.dataclass(frozen=True)
 class Sample:
     """One evaluation sample: zero or one injected failure."""

@@ -3,16 +3,30 @@
 Pure, deterministic reductions over per-scenario outcomes.  The campaign
 runner (``campaign.py``) produces one :class:`ScenarioOutcome` per injected
 (or failure-free) scenario; this module turns a list of outcomes into the
-paper-style aggregates:
+paper-style aggregates.
 
-* **accuracy** — fraction of *positive* scenarios whose top-1 verdict names
-  the injected root cause (router failures accept any link of the slowed
-  router, since the detector localises at link granularity),
+A scenario may carry **several simultaneous injected failures** (the grid's
+``n_failures`` axis): ground truth is therefore a *tuple* of truths
+(``truth_locations`` / ``truth_t0s`` / ``truth_durations``, all empty for
+negatives), each with its own 1-based rank in the verdict's ranking
+(``truth_ranks``; ``None`` when unranked).  The aggregates are:
+
+* **accuracy (any-match)** — fraction of *positive* scenarios whose top-1
+  verdict names any of the injected root causes (router failures accept any
+  link of the slowed router, since the detector localises at link
+  granularity),
 * **FPR** — fraction of *negative* (failure-free) scenarios that were
   flagged,
-* **top-k localisation rate** — fraction of positives whose ground truth
-  appears within the first k entries of the ranking (monotone in k),
-* **compression ratio** and **probe overhead** means.
+* **top-k localisation rate** — fraction of positives with *some* ground
+  truth within the first k entries of the ranking (monotone in k),
+* **recall@k** — fraction of *individual injected failures* (over all
+  positives) ranked within the top k; for single-failure grids this
+  coincides with top-k,
+* **compression ratio** and **probe overhead** means.  Probe overhead is
+  a per-deployment quantity; the headline mean weights each deployment by
+  the number of scenarios it served (``mean_probe_overhead``), with the
+  unweighted per-deployment mean kept alongside
+  (``mean_probe_overhead_unweighted``).
 
 Binomial rates carry Wilson score confidence intervals so small grid cells
 report honest uncertainty.  Everything here is plain float arithmetic in a
@@ -28,38 +42,60 @@ import math
 @dataclasses.dataclass(frozen=True)
 class ScenarioOutcome:
     """Result of one campaign scenario (the exchange record between the
-    runner and the aggregators)."""
+    runner and the aggregators).  Picklable: plain scalars and tuples only,
+    so outcomes cross process boundaries under ``executor='process'``."""
     scenario_id: int
     workload: str
     mesh_w: int
     mesh_h: int
     kind: str                  # 'core' | 'link' | 'router' | 'none'
     severity: float            # injected slowdown (0.0 for 'none')
+    n_failures: int            # simultaneous injected failures (0 = 'none')
     rep: int                   # replicate index within the grid cell
     sim_seed: int              # simulator seed actually used
-    # ground truth (None fields for negative samples)
-    truth_location: int | None
-    t0: float | None
-    duration: float | None
+    # ground truth (empty tuples for negative samples), index-aligned
+    truth_locations: tuple[int, ...]
+    truth_t0s: tuple[float, ...]
+    truth_durations: tuple[float, ...]
     # verdict
     flagged: bool
     pred_kind: str | None
     pred_location: int | None
     score: float
-    matched: bool              # top-1 correctness (router-aware)
-    truth_rank: int | None     # 1-based rank of truth in ranking, or None
+    matched: bool              # top-1 matches any truth (router-aware)
+    truth_rank: int | None     # best 1-based rank over truths, or None
     # accounting
     compression_ratio: float
     total_time: float
+    probe_overhead: float          # of the deployment that ran the scenario
+    # per-failure rank (int | None), aligned with truth_locations; sits
+    # after the required fields only because it carries a default
+    truth_ranks: tuple = ()
     baseline_results: tuple = ()   # ((name, flagged, matched), ...)
 
     @property
     def positive(self) -> bool:
         return self.kind != "none"
 
+    # -- single-failure convenience views (first truth or None) ------------
+    @property
+    def truth_location(self) -> int | None:
+        return self.truth_locations[0] if self.truth_locations else None
+
+    @property
+    def t0(self) -> float | None:
+        return self.truth_t0s[0] if self.truth_t0s else None
+
+    @property
+    def duration(self) -> float | None:
+        return self.truth_durations[0] if self.truth_durations else None
+
     def cell(self) -> tuple:
         return (self.workload, self.mesh_w, self.mesh_h, self.kind,
-                self.severity)
+                self.severity, self.n_failures)
+
+    def deploy_key(self) -> tuple:
+        return (self.workload, self.mesh_w, self.mesh_h)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,11 +132,13 @@ def wilson_interval(k: int, n: int, z: float = 1.96) -> tuple[float, float]:
 class CampaignMetrics:
     """Aggregate metrics over a set of scenario outcomes."""
     n_scenarios: int
-    accuracy: BinomialStat          # over positives
+    accuracy: BinomialStat          # any-match, over positives
     fpr: BinomialStat               # over negatives
     topk: tuple[tuple[int, BinomialStat], ...]   # ((k, stat), ...)
+    recall: tuple[tuple[int, BinomialStat], ...]  # per-failure recall@k
     mean_compression: float
-    mean_probe_overhead: float      # filled by the runner (per deployment)
+    mean_probe_overhead: float      # weighted by per-deployment scenarios
+    mean_probe_overhead_unweighted: float   # plain mean over deployments
 
     def topk_rate(self, k: int) -> float:
         for kk, stat in self.topk:
@@ -108,21 +146,54 @@ class CampaignMetrics:
                 return stat.rate
         raise KeyError(k)
 
+    def recall_at(self, k: int) -> float:
+        for kk, stat in self.recall:
+            if kk == k:
+                return stat.rate
+        raise KeyError(k)
+
 
 def topk_stat(outcomes: list[ScenarioOutcome], k: int) -> BinomialStat:
+    """Scenario-level: some truth ranked within the top k."""
     pos = [o for o in outcomes if o.positive]
     hits = sum(1 for o in pos
                if o.truth_rank is not None and o.truth_rank <= k)
     return BinomialStat(hits, len(pos))
 
 
+def deployment_overheads(outcomes: list[ScenarioOutcome]) \
+        -> dict[tuple, float]:
+    """Per-deployment probe overhead, keyed ``deploy_key()``, in
+    first-occurrence order.  The single reduction shared by ``aggregate``
+    and ``CampaignResult.probe_overheads``."""
+    dep_ov: dict[tuple, float] = {}
+    for o in outcomes:
+        dep_ov.setdefault(o.deploy_key(), o.probe_overhead)
+    return dep_ov
+
+
+def recall_stat(outcomes: list[ScenarioOutcome], k: int) -> BinomialStat:
+    """Failure-level recall@k: each injected failure of each positive
+    scenario is one trial; a hit is that failure's own truth ranked ≤ k."""
+    hits = trials = 0
+    for o in outcomes:
+        if not o.positive:
+            continue
+        for r in o.truth_ranks:
+            trials += 1
+            hits += int(r is not None and r <= k)
+    return BinomialStat(hits, trials)
+
+
 def aggregate(outcomes: list[ScenarioOutcome],
-              ks: tuple[int, ...] = (1, 3, 5),
-              probe_overhead: float = 0.0) -> CampaignMetrics:
+              ks: tuple[int, ...] = (1, 3, 5)) -> CampaignMetrics:
     """Reduce outcomes to campaign metrics.
 
-    Positives feed accuracy/top-k; negatives feed FPR only — a grid cell
-    with ``kind='none'`` therefore contributes zero accuracy trials.
+    Positives feed accuracy/top-k/recall; negatives feed FPR only — a grid
+    cell with ``kind='none'`` therefore contributes zero accuracy trials.
+    Probe overhead is aggregated both scenario-weighted (each outcome
+    contributes its deployment's overhead) and unweighted over the distinct
+    deployments that appear in ``outcomes``.
     """
     pos = [o for o in outcomes if o.positive]
     neg = [o for o in outcomes if not o.positive]
@@ -130,13 +201,19 @@ def aggregate(outcomes: list[ScenarioOutcome],
     fpr = BinomialStat(sum(o.flagged for o in neg), len(neg))
     comp = [o.compression_ratio for o in outcomes]
     mean_comp = sum(comp) / len(comp) if comp else 0.0
+    ov = [o.probe_overhead for o in outcomes]
+    mean_ov = sum(ov) / len(ov) if ov else 0.0
+    dep_ov = deployment_overheads(outcomes)
+    mean_ov_unw = (sum(dep_ov.values()) / len(dep_ov)) if dep_ov else 0.0
     return CampaignMetrics(
         n_scenarios=len(outcomes),
         accuracy=acc,
         fpr=fpr,
         topk=tuple((k, topk_stat(outcomes, k)) for k in ks),
+        recall=tuple((k, recall_stat(outcomes, k)) for k in ks),
         mean_compression=mean_comp,
-        mean_probe_overhead=probe_overhead,
+        mean_probe_overhead=mean_ov,
+        mean_probe_overhead_unweighted=mean_ov_unw,
     )
 
 
@@ -144,7 +221,8 @@ def by_cell(outcomes: list[ScenarioOutcome],
             ks: tuple[int, ...] = (1, 3, 5)) \
         -> dict[tuple, CampaignMetrics]:
     """Per-cell aggregation, keyed (workload, mesh_w, mesh_h, kind,
-    severity).  Cells appear in first-occurrence (enumeration) order."""
+    severity, n_failures).  Cells appear in first-occurrence (enumeration)
+    order."""
     cells: dict[tuple, list[ScenarioOutcome]] = {}
     for o in outcomes:
         cells.setdefault(o.cell(), []).append(o)

@@ -107,29 +107,41 @@ def simulate(mapped: MappedGraph, cfg: SimConfig,
     cap = np.maximum(cap, 0.05 * cfg.mu_c)
     link_bw = np.full(mesh.n_links, cfg.link_bw)
 
-    core_fail: dict[int, tuple[float, float, float]] = {}
-    link_fail: dict[int, tuple[float, float, float]] = {}
+    # Each resource carries a *list* of slowdown windows: simultaneous
+    # fail-slow failures may overlap on one resource (e.g. two routers
+    # slowing a shared link, or two windows on the same core), and
+    # overlapping active windows compound multiplicatively.
+    core_fail: dict[int, list[tuple[float, float, float]]] = {}
+    link_fail: dict[int, list[tuple[float, float, float]]] = {}
     for f in failures:
+        win = (f.t0, f.t0 + f.duration, f.slowdown)
         if f.kind == "core":
-            core_fail[f.location] = (f.t0, f.t0 + f.duration, f.slowdown)
+            core_fail.setdefault(f.location, []).append(win)
         elif f.kind == "link":
-            link_fail[f.location] = (f.t0, f.t0 + f.duration, f.slowdown)
+            link_fail.setdefault(f.location, []).append(win)
         elif f.kind == "router":
             for lid in mesh.links_of_router(f.location):
-                link_fail[lid] = (f.t0, f.t0 + f.duration, f.slowdown)
+                link_fail.setdefault(lid, []).append(win)
         else:
             raise ValueError(f.kind)
 
+    def _active_slowdown(windows, t: float) -> float:
+        s = 1.0
+        for t0, t1, slow in windows:
+            if t0 <= t < t1:
+                s *= slow
+        return s
+
     def core_capacity(c: int, t: float) -> float:
-        w = core_fail.get(c)
-        if w and w[0] <= t < w[1]:
-            return cap[c] / w[2]
+        ws = core_fail.get(c)
+        if ws:
+            return cap[c] / _active_slowdown(ws, t)
         return cap[c]
 
     def link_rate(lid: int, t: float) -> float:
-        w = link_fail.get(lid)
-        if w and w[0] <= t < w[1]:
-            return link_bw[lid] / w[2]
+        ws = link_fail.get(lid)
+        if ws:
+            return link_bw[lid] / _active_slowdown(ws, t)
         return link_bw[lid]
 
     # --- task graph bookkeeping -------------------------------------------

@@ -18,7 +18,7 @@ from .compiler import plan_probes
 from .detection import detect_cores, detect_links
 from .failrank import FailRankParams, FailRankResult, attribute_links, \
     failrank
-from .failures import FailSlow
+from .failures import FailSlow, truth_candidates
 from .graph import CompGraph
 from .mapping import MappedGraph, map_graph
 from .mcg import MCG, build_mcg
@@ -51,13 +51,31 @@ class Verdict:
     failrank: FailRankResult
     mcg: MCG
     total_time: float
+    # every resource whose detection evidence clears the flag threshold,
+    # sorted by raw evidence — the multi-failure report.  The verdict's
+    # kind/location additionally weigh FailRank attribution, so the two
+    # orderings may disagree on which resource comes first.
+    flagged_resources: tuple[tuple[str, int, float], ...] = ()
+    mesh: Mesh2D | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
-    def matches(self, failure: FailSlow | None) -> bool:
-        """Correctness of this verdict against ground truth."""
+    def matches(self, failure: FailSlow | None,
+                mesh: Mesh2D | None = None) -> bool:
+        """Correctness of this verdict against ground truth, router-aware:
+        a router truth is matched by any link of the slowed router (the
+        detector only localises cores and links)."""
         if failure is None:
             return not self.flagged
-        return (self.flagged and self.kind == failure.kind
-                and self.location == failure.location)
+        if not self.flagged:
+            return False
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh is None:
+            if failure.kind == "router":
+                raise ValueError(
+                    "judging a router truth needs the mesh topology; pass "
+                    "mesh= or use a Verdict produced by Sloth.analyse")
+            return (self.kind, self.location) == failure.label()
+        return (self.kind, self.location) in truth_candidates(failure, mesh)
 
 
 class Sloth:
@@ -125,6 +143,17 @@ class Sloth:
         max_link_p = float(link_ev.max()) if len(link_ev) else 0.0
         flagged = max(max_core_p, max_link_p) >= cfg.detect_threshold
 
+        # every resource whose detection probability independently clears
+        # the threshold — with k simultaneous failures there can be several
+        flagged_res = (
+            [("core", int(c), float(core_ev[c]))
+             for c in range(n_cores)
+             if core_ev[c] >= cfg.detect_threshold]
+            + [("link", int(l), float(link_ev[l]))
+               for l in range(len(link_ev))
+               if link_ev[l] >= cfg.detect_threshold])
+        flagged_res.sort(key=lambda x: (-x[2], x[0], x[1]))
+
         ranking = (
             [("core", int(c), float(core_scores[c]))
              for c in np.argsort(-core_scores)[:5] if core_scores[c] > 0]
@@ -138,7 +167,9 @@ class Sloth:
             kind, loc, score = ranking[0]
         return Verdict(flagged=flagged, kind=kind, location=loc, score=score,
                        ranking=ranking, recorder=rec, failrank=fr, mcg=mcg,
-                       total_time=sim.total_time)
+                       total_time=sim.total_time,
+                       flagged_resources=tuple(flagged_res),
+                       mesh=self.mesh)
 
     def detect(self, failures: list[FailSlow] | None = None,
                seed: int = 0) -> Verdict:

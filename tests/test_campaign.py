@@ -54,14 +54,15 @@ def test_scenario_derivation_no_global_rng(small_result):
         s = next(s for s in enumerate_scenarios(SMALL)
                  if s.scenario_id == o.scenario_id)
         dep = cache.get(s.workload, s.mesh_w, s.mesh_h)
-        failure, sim_seed = materialise(SMALL, s, dep)
+        failures, sim_seed = materialise(SMALL, s, dep)
         assert sim_seed == o.sim_seed
         if o.kind == "none":
-            assert failure is None
+            assert failures == ()
         else:
-            assert failure.location == o.truth_location
-            assert failure.t0 == o.t0 and failure.duration == o.duration
-            assert failure.slowdown == o.severity
+            assert tuple(f.location for f in failures) == o.truth_locations
+            assert tuple(f.t0 for f in failures) == o.truth_t0s
+            assert tuple(f.duration for f in failures) == o.truth_durations
+            assert all(f.slowdown == o.severity for f in failures)
 
 
 def test_campaign_deterministic(small_result):
@@ -128,6 +129,34 @@ def test_truth_candidates_router_maps_to_links():
     assert truth_candidates(f, mesh) == {("core", 5)}
 
 
+def test_verdict_matches_router_truths():
+    """Regression: `Verdict.matches` must accept a router truth when the
+    verdict names any link of the slowed router — it used to compare
+    (kind, location) literally, so router truths could never match."""
+    from repro.core.sloth import Verdict
+    mesh = Mesh2D(4)
+    router = 5
+    lid = mesh.links_of_router(router)[0]
+    v = Verdict(flagged=True, kind="link", location=lid, score=1.0,
+                ranking=[("link", lid, 1.0)], recorder=None, failrank=None,
+                mcg=None, total_time=1.0, mesh=mesh)
+    hit = FailSlow("router", router, 0.0, 1.0, 8.0)
+    assert v.matches(hit)
+    assert v.matches(hit, mesh)         # explicit mesh overrides
+    # a different router that does not own `lid` must not match
+    other = next(c for c in range(mesh.n_cores)
+                 if lid not in mesh.links_of_router(c))
+    assert not v.matches(FailSlow("router", other, 0.0, 1.0, 8.0))
+    # core/link truths keep exact-match semantics
+    assert not v.matches(FailSlow("core", 5, 0.0, 1.0, 8.0))
+    assert v.matches(FailSlow("link", lid, 0.0, 1.0, 8.0))
+    assert not v.matches(None)          # flagged verdict vs negative truth
+    # a mesh-less verdict cannot judge router truths
+    bare = dataclasses.replace(v, mesh=None)
+    with pytest.raises(ValueError):
+        bare.matches(hit)
+
+
 # ---------------------------------------------------------------------------
 # campaign ≡ serial Sloth.detect
 # ---------------------------------------------------------------------------
@@ -142,10 +171,9 @@ def test_campaign_matches_serial_detect(small_result):
             sloths[key] = Sloth(build_workload(o.workload),
                                 Mesh2D(o.mesh_w, o.mesh_h))
         sloth = sloths[key]
-        failures = None
-        if o.kind != "none":
-            failures = [FailSlow(o.kind, o.truth_location, o.t0,
-                                 o.duration, o.severity)]
+        failures = [FailSlow(o.kind, loc, t0, dur, o.severity)
+                    for loc, t0, dur in zip(o.truth_locations, o.truth_t0s,
+                                            o.truth_durations)] or None
         v = sloth.detect(failures, seed=o.sim_seed)
         assert bool(v.flagged) == o.flagged
         assert v.kind == o.pred_kind
@@ -206,3 +234,17 @@ def test_deployment_cache_reused():
     assert a is b
     c = cache.get("darknet19", 4, 4, baselines=True)
     assert c is not a and len(c.detectors) == 5
+
+
+def test_deployment_cache_normalises_default_cfg():
+    """Regression: `cfg=None` and an explicit default `SlothConfig()` must
+    hit the same cache entry instead of building twice."""
+    from repro.core.sloth import SlothConfig
+    cache = DeploymentCache()
+    a = cache.get("darknet19", 4, 4)
+    b = cache.get("darknet19", 4, 4, cfg=SlothConfig())
+    assert a is b
+    # a genuinely different config still gets its own deployment
+    c = cache.get("darknet19", 4, 4,
+                  cfg=SlothConfig(detect_threshold=0.9))
+    assert c is not a
