@@ -13,8 +13,8 @@ import time
 
 import numpy as np
 
-from repro.core import baselines as B
 from repro.core import campaign as C
+from repro.core import detectors as D
 from repro.core import metrics as M
 from repro.core.failures import FailSlow, effective_samples, make_dataset
 from repro.core.graph import build_workload
@@ -80,30 +80,30 @@ def bench_impact():
 
 def bench_accuracy(n_failures=None):
     """Campaign-driven Table III: one scenario grid over the five
-    workloads, SLOTH and the five baselines judged on the same traces."""
+    workloads, every registered detector (SLOTH + the five baselines)
+    judged on the same traces through the unified detector API."""
     n_failures = n_failures or (152 if FULL else 24)
     reps = max(2, n_failures // 4)
+    detectors = D.DEFAULT_DETECTORS
     grid = C.CampaignGrid(workloads=WORKLOADS, meshes=(4,),
                           kinds=("core", "link", "none"),
                           severities=(10.0,), reps=reps, campaign_seed=3)
     # fresh cache, pre-built deployments, serial dispatch: the timed
-    # region covers scenario execution (simulate + SLOTH analyse + 5
-    # baseline detects) only and is independent of core count, so
-    # us_per_call is reproducible and comparable across invocations
+    # region covers scenario execution (one simulate + 6 detector
+    # analyses) only and is independent of core count, so us_per_call is
+    # reproducible and comparable across invocations
     cache = C.DeploymentCache()
     for wl in WORKLOADS:
-        cache.get(wl, 4, 4, baselines=True)
+        cache.get(wl, 4, 4, detectors=detectors)
     t0 = time.perf_counter()
-    res = C.run_campaign(grid, baselines=True, cache=cache, workers=1)
+    res = C.run_campaign(grid, detectors=detectors, cache=cache, workers=1)
     us = (time.perf_counter() - t0) / max(len(res.outcomes), 1) * 1e6
     rows = []
     agg = {}
     for wl in WORKLOADS:
         sub = [o for o in res.outcomes if o.workload == wl]
-        m = M.aggregate(sub)
-        stats = {"sloth": (m.accuracy, m.fpr)}
-        stats.update(M.baseline_stats(sub))
-        for name, (acc, fpr) in stats.items():
+        for name, m in M.by_detector(sub).items():
+            acc, fpr = m.accuracy, m.fpr
             rows.append((f"tab3_{wl}_{name}_acc", round(us, 1),
                          round(acc.pct(), 2)))
             rows.append((f"tab3_{wl}_{name}_fpr", round(us, 1),

@@ -1,9 +1,12 @@
 """Scenario-campaign sweep: reproduce the paper's aggregate metrics.
 
 Runs a grid of fail-slow scenarios (workload × mesh × failure kind ×
-severity × n_failures × replicate) through the SLOTH pipeline and prints
-per-cell and campaign-level accuracy / FPR / top-k localisation /
-recall@k / compression / probe overhead, with Wilson confidence intervals.
+severity × n_failures × replicate) through every requested detector
+(``--detectors``: SLOTH and/or the five baselines, all judged on the same
+traces by the same router-aware rule) and prints per-cell, per-detector
+and campaign-level accuracy / FPR / top-k localisation / recall@k /
+compression / probe overhead, with Wilson confidence intervals and
+wall-time telemetry.
 
     PYTHONPATH=src python examples/campaign_sweep.py            # full grid
     PYTHONPATH=src python examples/campaign_sweep.py --tiny     # CI smoke
@@ -11,6 +14,8 @@ recall@k / compression / probe overhead, with Wilson confidence intervals.
         --tiny --executor process --n-failures 2                # multi-core
     PYTHONPATH=src python examples/campaign_sweep.py \\
         --mesh 12x12 --mesh 16x8 --executor process             # big meshes
+    PYTHONPATH=src python examples/campaign_sweep.py \\
+        --detectors sloth --detectors thres --detectors adr     # Table III
 """
 
 import argparse
@@ -21,6 +26,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.campaign import CampaignGrid, run_campaign  # noqa: E402
+from repro.core.detectors import (DEFAULT_DETECTORS,  # noqa: E402
+                                  available_detectors)
 
 
 def make_grid(args) -> CampaignGrid:
@@ -60,8 +67,18 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", action="append", default=None, metavar="WxH",
                     help="mesh axis entry, 'W' or 'WxH' "
                          "(repeatable, e.g. --mesh 12x12 --mesh 16x8)")
+    ap.add_argument("--detectors", action="append", default=None,
+                    metavar="NAME", choices=available_detectors(),
+                    help="detector to run on every scenario (repeatable; "
+                         "default: sloth; see also --all-detectors)")
+    ap.add_argument("--all-detectors", action="store_true",
+                    help="shorthand for every registered detector "
+                         "(SLOTH + the five baselines)")
     args = ap.parse_args(argv)
 
+    detectors = (DEFAULT_DETECTORS if args.all_detectors
+                 else tuple(args.detectors) if args.detectors
+                 else ("sloth",))
     grid = make_grid(args)
     n = grid.n_scenarios()
     print(f"campaign: {len(grid.workloads)} workloads × "
@@ -69,7 +86,7 @@ def main(argv=None) -> int:
           f"{len(grid.severities)} severities × "
           f"{len(grid.n_failures)} n_failures × {grid.reps} reps "
           f"= {n} scenarios (seed {grid.campaign_seed}, "
-          f"executor {args.executor})")
+          f"executor {args.executor}, detectors {', '.join(detectors)})")
 
     done = []
 
@@ -80,7 +97,7 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     res = run_campaign(grid, workers=args.workers, executor=args.executor,
-                       progress=progress)
+                       detectors=detectors, progress=progress)
     wall = time.perf_counter() - t0
 
     print(f"\n== per-cell (workload, mesh, kind, severity, n_failures) ==")
@@ -93,6 +110,16 @@ def main(argv=None) -> int:
                     f"top3 {m.topk_rate(3)*100:6.2f}% "
                     f"recall@3 {m.recall_at(3)*100:6.2f}%")
         print(f"  {wl:12s} {w}x{h} {kind:6s} x{sev:<5.1f} k={nf} {stat}")
+
+    if len(detectors) > 1:
+        print(f"\n== per-detector (accuracy / FPR / top-3 / recall@3) ==")
+        for name, m in res.detector_metrics.items():
+            print(f"  {name:8s} acc {m.accuracy.pct():6.2f}% "
+                  f"({m.accuracy.successes}/{m.accuracy.trials})  "
+                  f"FPR {m.fpr.pct():6.2f}% "
+                  f"({m.fpr.successes}/{m.fpr.trials})  "
+                  f"top3 {m.topk_rate(3)*100:6.2f}%  "
+                  f"recall@3 {m.recall_at(3)*100:6.2f}%")
 
     print(f"\n== campaign aggregate ==")
     print(res.summary())

@@ -1,3 +1,16 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# Unified detector API: the one Verdict, the Detector protocol and the
+# string-keyed registry every detector (SLOTH + baselines + user
+# extensions) hangs off.  Heavier layers (campaign, sloth, baselines) are
+# imported explicitly by their consumers.
+from .detectors import (DEFAULT_DETECTORS, Detector, Verdict,  # noqa: F401
+                        available_detectors, get_detector,
+                        prepare_detector, register_detector)
+
+__all__ = [
+    "DEFAULT_DETECTORS", "Detector", "Verdict", "available_detectors",
+    "get_detector", "prepare_detector", "register_detector",
+]

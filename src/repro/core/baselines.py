@@ -1,37 +1,56 @@
 """Five baseline fail-slow detectors (paper §IV-A), adapted to the
-many-core accelerator domain as in-house implementations.  All consume the
-same raw trace infrastructure (SimResult) as SLOTH for a fair comparison.
+many-core accelerator domain as in-house implementations and registered
+under the unified :class:`~repro.core.detectors.Detector` protocol:
 
-  Thres    — static 2× threshold over profiled nominal latency
-  Mscope   — Microscope: dependency DAG + random-walk root-cause scoring
-  IASO     — peer timeout signals → AIMD scores → DBSCAN outlier cluster
-  Perseus  — polynomial regression on latency-vs-throughput, p99.9 outliers
-  ADR      — sliding windows, adaptive thresholds from history percentiles
+  thres    — static 2× threshold over profiled nominal latency
+  mscope   — Microscope: dependency DAG + random-walk root-cause scoring
+  iaso     — peer timeout signals → AIMD scores → DBSCAN outlier cluster
+  perseus  — polynomial regression on latency-vs-throughput, p99.9 outliers
+  adr      — sliding windows, adaptive thresholds from history percentiles
+
+All consume the same raw trace infrastructure (``SimResult``) as SLOTH for
+a fair comparison: ``prepare(graph, mesh, profile, cfg)`` fits each
+detector's nominal model against a healthy profiling run, and
+``analyse(sim)`` returns the unified
+:class:`~repro.core.detectors.Verdict` — a single-entry ranking with the
+mesh attached, so ``Verdict.matches`` applies the shared router-aware
+judging rule (a baseline naming any link of a slowed router is correct)
+and the campaign's top-k / recall@k metrics treat baselines and SLOTH
+identically.  The old lossy ``BaselineVerdict`` 4-field verdict survives
+only as a deprecation shim.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
 import numpy as np
 
-from .failures import FailSlow
+from .detectors import Verdict, _register_builtin
 from .routing import Mesh2D
 from .simulator import SimResult
 
+__all__ = ["Thres", "Mscope", "IASO", "Perseus", "ADR", "ALL_BASELINES",
+           "BaselineVerdict", "BASELINE_NAMES"]
 
-@dataclasses.dataclass
-class BaselineVerdict:
-    flagged: bool
-    kind: str | None
-    location: int | None
-    score: float
 
-    def matches(self, failure: FailSlow | None) -> bool:
-        if failure is None:
-            return not self.flagged
-        return (self.flagged and self.kind == failure.kind
-                and self.location == failure.location)
+class BaselineVerdict(Verdict):
+    """Deprecated 4-field verdict.  Baselines now return the unified
+    :class:`~repro.core.detectors.Verdict`; this shim keeps old
+    constructor calls working (minus the literal ``(kind, location)``
+    ``matches`` bug — matching is inherited, router-aware, from
+    ``Verdict``)."""
+
+    def __init__(self, flagged: bool, kind: str | None = None,
+                 location: int | None = None, score: float = 0.0):
+        warnings.warn(
+            "BaselineVerdict is deprecated; baseline detectors return the "
+            "unified repro.core.detectors.Verdict",
+            DeprecationWarning, stacklevel=2)
+        ranking = ([(kind, location, score)]
+                   if flagged and kind is not None else [])
+        super().__init__(flagged=flagged, kind=kind, location=location,
+                         score=score, ranking=ranking)
 
 
 def _per_core_rates(sim: SimResult):
@@ -54,16 +73,78 @@ def _per_link_latency(sim: SimResult, mesh: Mesh2D):
     return lat
 
 
+class _Baseline:
+    """Shared life cycle for the five baselines.
+
+    Subclasses implement ``_fit(mesh, profile)`` (nominal model from a
+    healthy run) and ``analyse(sim)``.  The legacy two-argument
+    constructor ``Cls(mesh, profile)`` still prepares in place; the
+    registry path is ``Cls().prepare(graph, mesh, profile, cfg)``.
+    """
+
+    name = "baseline"
+
+    def __init__(self, mesh: Mesh2D | None = None,
+                 profile: SimResult | None = None):
+        self.mesh: Mesh2D | None = None
+        if mesh is not None and profile is not None:
+            self.prepare(None, mesh, profile)
+
+    def prepare(self, graph, mesh: Mesh2D, profile: SimResult,
+                cfg=None) -> "_Baseline":
+        """Fit nominal models against a healthy profiling run.  ``graph``
+        and ``cfg`` (a ``SlothConfig``) are accepted for protocol
+        uniformity; the baselines derive everything from the trace."""
+        self.mesh = mesh
+        self._fit(mesh, profile)
+        return self
+
+    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+        raise NotImplementedError
+
+    def analyse(self, sim: SimResult) -> Verdict:
+        raise NotImplementedError
+
+    def detect(self, sim: SimResult, **kwargs) -> Verdict:
+        """Deprecated alias of :meth:`analyse`.  The old per-call tuning
+        kwargs (``Mscope.detect(sim, walks=, seed=)``,
+        ``ADR.detect(sim, n_windows=)``) map onto the corresponding
+        instance attributes."""
+        warnings.warn(
+            f"{type(self).__name__}.detect() is deprecated; use "
+            f".analyse()", DeprecationWarning, stacklevel=2)
+        allowed = {"walks": "walks", "seed": "walk_seed",
+                   "n_windows": "n_windows"}
+        for k, v in kwargs.items():
+            attr = allowed.get(k)
+            if attr is None or not hasattr(self, attr):
+                raise TypeError(f"{type(self).__name__}.detect() got an "
+                                f"unexpected keyword argument {k!r}")
+            setattr(self, attr, v)
+        return self.analyse(sim)
+
+    def _verdict(self, sim: SimResult, flagged: bool,
+                 kind: str | None, location: int | None,
+                 score: float) -> Verdict:
+        ranking = ([(kind, int(location), float(score))]
+                   if flagged else [])
+        return Verdict(flagged=bool(flagged), kind=kind,
+                       location=(int(location) if flagged else None),
+                       score=float(score), ranking=ranking,
+                       total_time=float(sim.total_time), mesh=self.mesh,
+                       detector=self.name)
+
+
 # ---------------------------------------------------------------------------
 # (1) Threshold filtering
 # ---------------------------------------------------------------------------
 
-class Thres:
+class Thres(_Baseline):
     """Flags any component whose latency exceeds 2× the profiled nominal."""
 
     name = "thres"
 
-    def __init__(self, mesh: Mesh2D, profile: SimResult):
+    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
         cores, stages, rate, _ = _per_core_rates(profile)
         self.nominal = {}
         for c, s, r in zip(cores, stages, rate):
@@ -73,9 +154,8 @@ class Thres:
         link_lat = _per_link_latency(profile, mesh)
         self.link_nominal = {k: float(np.median(v))
                              for k, v in link_lat.items()}
-        self.mesh = mesh
 
-    def detect(self, sim: SimResult) -> BaselineVerdict:
+    def analyse(self, sim: SimResult) -> Verdict:
         cores, stages, rate, _ = _per_core_rates(sim)
         worst, where = 1.0, None
         for c, s, r in zip(cores, stages, rate):
@@ -93,19 +173,20 @@ class Thres:
             if slow > worst:
                 worst, where = slow, ("link", int(lid))
         if worst >= 2.0 and where:
-            return BaselineVerdict(True, where[0], where[1], worst)
-        return BaselineVerdict(False, None, None, worst)
+            return self._verdict(sim, True, where[0], where[1], worst)
+        return self._verdict(sim, False, None, None, worst)
 
 
 # ---------------------------------------------------------------------------
 # (2) Microscope: dependency DAG + random walk
 # ---------------------------------------------------------------------------
 
-class Mscope:
+class Mscope(_Baseline):
     name = "mscope"
+    walks = 200
+    walk_seed = 0
 
-    def __init__(self, mesh: Mesh2D, profile: SimResult):
-        self.mesh = mesh
+    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
         cores, stages, rate, _ = _per_core_rates(profile)
         self.nominal = {}
         for c, s, r in zip(cores, stages, rate):
@@ -113,9 +194,8 @@ class Mscope:
         self.nominal = {k: float(np.median(v))
                         for k, v in self.nominal.items()}
 
-    def detect(self, sim: SimResult, walks: int = 200, seed: int = 0)\
-            -> BaselineVerdict:
-        rng = np.random.default_rng(seed)
+    def analyse(self, sim: SimResult) -> Verdict:
+        rng = np.random.default_rng(self.walk_seed)
         cores, stages, rate, _ = _per_core_rates(sim)
         anomaly = np.zeros(self.mesh.n_cores)
         for c, r in zip(cores, rate):
@@ -135,8 +215,8 @@ class Mscope:
         visits = np.zeros(self.mesh.n_cores)
         anomalous = np.nonzero(anomaly > 0.5)[0]
         if len(anomalous) == 0:
-            return BaselineVerdict(False, None, None, 0.0)
-        for _ in range(walks):
+            return self._verdict(sim, False, None, None, 0.0)
+        for _ in range(self.walks):
             node = int(rng.choice(anomalous))
             for _ in range(8):
                 visits[node] += anomaly[node] + 0.1
@@ -147,7 +227,7 @@ class Mscope:
                 probs /= probs.sum()
                 node = int(opts[rng.choice(len(opts), p=probs)][0])
         loc = int(np.argmax(visits))
-        return BaselineVerdict(True, "core", loc, float(visits[loc]))
+        return self._verdict(sim, True, "core", loc, float(visits[loc]))
 
 
 # ---------------------------------------------------------------------------
@@ -175,11 +255,10 @@ def _dbscan_1d(x: np.ndarray, eps: float, min_pts: int = 3) -> np.ndarray:
     return labels
 
 
-class IASO:
+class IASO(_Baseline):
     name = "iaso"
 
-    def __init__(self, mesh: Mesh2D, profile: SimResult):
-        self.mesh = mesh
+    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
         cores, stages, rate, dur = _per_core_rates(profile)
         self.expected = {}
         for c, s, d in zip(cores, stages, dur):
@@ -187,7 +266,7 @@ class IASO:
         self.expected = {k: float(np.median(v)) * 2.0
                          for k, v in self.expected.items()}
 
-    def detect(self, sim: SimResult) -> BaselineVerdict:
+    def analyse(self, sim: SimResult) -> Verdict:
         cores, stages, rate, dur = _per_core_rates(sim)
         score = np.zeros(self.mesh.n_cores)
         order = np.argsort(sim.comp["t_start"])
@@ -203,25 +282,24 @@ class IASO:
         labels = _dbscan_1d(score, eps=max(score.std(), 1e-9) * 0.5)
         # outliers = cores not in the majority cluster with high score
         if len(np.unique(labels[labels >= 0])) == 0:
-            return BaselineVerdict(False, None, None, 0.0)
+            return self._verdict(sim, False, None, None, 0.0)
         major = np.bincount(labels[labels >= 0]).argmax()
         cand = [(score[i], i) for i in range(len(score))
                 if labels[i] != major and score[i] > score.mean() + 2]
         if not cand:
-            return BaselineVerdict(False, None, None, float(score.max()))
+            return self._verdict(sim, False, None, None, float(score.max()))
         sc, loc = max(cand)
-        return BaselineVerdict(True, "core", int(loc), float(sc))
+        return self._verdict(sim, True, "core", int(loc), float(sc))
 
 
 # ---------------------------------------------------------------------------
 # (4) Perseus: regression on latency-vs-throughput
 # ---------------------------------------------------------------------------
 
-class Perseus:
+class Perseus(_Baseline):
     name = "perseus"
 
-    def __init__(self, mesh: Mesh2D, profile: SimResult):
-        self.mesh = mesh
+    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
         cores, stages, rate, dur = _per_core_rates(profile)
         x = np.log(np.maximum(profile.comp["flops"], 1.0))
         y = np.log(np.maximum(dur, 1e-12))
@@ -229,7 +307,7 @@ class Perseus:
         resid = y - np.polyval(self.poly, x)
         self.p999 = float(np.quantile(resid, 0.999))
 
-    def detect(self, sim: SimResult) -> BaselineVerdict:
+    def analyse(self, sim: SimResult) -> Verdict:
         cores = sim.comp["core"]
         x = np.log(np.maximum(sim.comp["flops"], 1.0))
         y = np.log(np.maximum(sim.comp["t_end"] - sim.comp["t_start"],
@@ -237,24 +315,26 @@ class Perseus:
         resid = y - np.polyval(self.poly, x)
         out = resid > self.p999
         if not out.any():
-            return BaselineVerdict(False, None, None,
-                                   float(resid.max() - self.p999))
+            return self._verdict(sim, False, None, None,
+                                 float(resid.max() - self.p999))
         counts = np.bincount(cores[out], minlength=self.mesh.n_cores)
         loc = int(np.argmax(counts))
-        return BaselineVerdict(True, "core", loc, float(counts[loc]))
+        return self._verdict(sim, True, "core", loc, float(counts[loc]))
 
 
 # ---------------------------------------------------------------------------
 # (5) ADR: sliding windows with adaptive thresholds
 # ---------------------------------------------------------------------------
 
-class ADR:
+class ADR(_Baseline):
     name = "adr"
+    n_windows = 8
 
-    def __init__(self, mesh: Mesh2D, profile: SimResult):
-        self.mesh = mesh
+    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+        pass                     # purely self-referential, no nominal model
 
-    def detect(self, sim: SimResult, n_windows: int = 8) -> BaselineVerdict:
+    def analyse(self, sim: SimResult) -> Verdict:
+        n_windows = self.n_windows
         cores, stages, rate, dur = _per_core_rates(sim)
         t_mid = (sim.comp["t_start"] + sim.comp["t_end"]) / 2
         total = max(sim.total_time, 1e-9)
@@ -281,8 +361,12 @@ class ADR:
                             worst, where = slow, c
                 hist.append(cur)
         if where is not None and worst > 1.5:
-            return BaselineVerdict(True, "core", int(where), worst)
-        return BaselineVerdict(False, None, None, worst)
+            return self._verdict(sim, True, "core", int(where), worst)
+        return self._verdict(sim, False, None, None, worst)
 
 
 ALL_BASELINES = [Thres, Mscope, IASO, Perseus, ADR]
+BASELINE_NAMES = tuple(cls.name for cls in ALL_BASELINES)
+
+for _cls in ALL_BASELINES:
+    _register_builtin(_cls.name, _cls)

@@ -2,8 +2,13 @@
 
 The paper's headline numbers (detection accuracy, FPR, compression ratio)
 are *campaign* statistics: aggregates over many injected fail-slow scenarios
-across workloads, failure kinds and mesh sizes.  This module turns the
-single-scenario ``Sloth.detect`` into a reproducible grid evaluation.
+across workloads, failure kinds and mesh sizes.  This module turns
+single-scenario detection into a reproducible grid evaluation, and — via
+the unified detector API (:mod:`repro.core.detectors`) — into the paper's
+SLOTH-vs-baselines comparison: ``run_campaign(grid, detectors=("sloth",
+"thres", "mscope", "iaso", "perseus", "adr"))`` analyses every scenario's
+trace with every requested detector under one judging rule and returns
+per-detector accuracy / FPR / top-k / recall@k cells.
 
 Scenario-grid schema
 --------------------
@@ -33,6 +38,19 @@ Link/router placements are restricted to resources the healthy run actually
 exercises (the paper: "failures occurring on unused resources are
 excluded"), using the deployment's cached healthy simulation.
 
+Detector model
+--------------
+``detectors=`` names registry entries (:func:`repro.core.detectors
+.get_detector`); each deployment prepares one instance per name against
+its healthy profiling run, the first name being the campaign's *primary*
+detector (top-level ``metrics`` / ``cells``).  Every scenario is simulated
+**once** and the one trace is analysed by all detectors, so the comparison
+is on identical data by construction.  Per-detector analyse wall time and
+per-scenario simulate wall time are recorded as telemetry (excluded from
+outcome equality, surfaced by ``CampaignResult.summary()``).  The old
+``baselines: bool`` flag survives as a deprecation shim that expands to
+``detectors=DEFAULT_DETECTORS``.
+
 Execution model
 ---------------
 ``run_campaign(..., workers=N, executor='thread'|'process')``:
@@ -42,23 +60,25 @@ Execution model
   pool.  Fine for small grids; the pure-Python simulator holds the GIL, so
   threads mostly pipeline rather than parallelise.
 * ``executor='process'`` — scenarios are dispatched to a
-  ``ProcessPoolExecutor``.  Only the picklable ``(grid, scenario, config)``
-  coordinates cross the process boundary; each worker process lazily
-  rebuilds the deployments it needs into its own module-level
-  :class:`DeploymentCache` (deployment construction is deterministic, so a
-  rebuilt deployment is identical to the parent's).  A ``cache=`` argument
-  is not consulted on this path.  Outcomes are collected in scenario order
-  and are **bit-identical** to serial/thread execution for any worker
-  count.
+  ``ProcessPoolExecutor``.  Only the picklable ``(grid, scenario, config,
+  detector names)`` coordinates cross the process boundary; each worker
+  process lazily rebuilds the deployments (and prepared detectors) it
+  needs into its own module-level :class:`DeploymentCache` (construction
+  is deterministic, so a rebuilt deployment is identical to the parent's).
+  Custom detectors must therefore be registered at import time of their
+  defining module to be resolvable inside spawned workers.  A ``cache=``
+  argument is not consulted on this path.  Outcomes are collected in
+  scenario order and are **bit-identical** to serial/thread execution for
+  any worker count.
 
 ``workers=None`` → cpu count; ``0``/``1`` or a single-scenario grid →
 serial in-process execution for either executor.
 
 Performance
 -----------
-``(workload, mesh, config)`` deployments — mapped graph, probe plan,
-healthy simulation, probe-overhead calibration, optional baseline
-detectors — are built once per cache (:class:`DeploymentCache`) and shared
+``(workload, mesh, config, detectors)`` deployments — mapped graph, probe
+plan, healthy simulation, probe-overhead calibration, prepared detector
+instances — are built once per cache (:class:`DeploymentCache`) and shared
 read-only by all scenarios of the grid.  The cache key normalises
 ``cfg=None`` to the default :class:`SlothConfig`, so explicit-default and
 implicit-default callers share one deployment.
@@ -70,23 +90,28 @@ import dataclasses
 import functools
 import multiprocessing
 import os
+import time
+import warnings
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 
 import numpy as np
 
-from . import baselines as B
-from .failures import FailSlow, truth_candidates
+from .detectors import (DEFAULT_DETECTORS, Detector, get_detector,
+                        instantiate_detector)
+from .failures import FailSlow, judge_verdict, truth_candidates
 from .graph import build_workload
-from .metrics import (CampaignMetrics, ScenarioOutcome, aggregate, by_cell,
-                      deployment_overheads)
+from .metrics import (CampaignMetrics, DetectorOutcome, ScenarioOutcome,
+                      aggregate, by_detector, deployment_overheads,
+                      detector_cells, wall_time_stats)
 from .routing import Mesh2D
 from .simulator import SimResult, simulate
-from .sloth import Sloth, SlothConfig, Verdict
+from .sloth import Sloth, SlothConfig, SlothDetector
 
 __all__ = [
-    "KINDS", "EXECUTORS", "CampaignGrid", "Scenario", "Deployment",
-    "DeploymentCache", "CampaignResult", "enumerate_scenarios",
-    "materialise", "run_scenario", "run_campaign", "truth_candidates",
+    "KINDS", "EXECUTORS", "DEFAULT_DETECTORS", "CampaignGrid", "Scenario",
+    "Deployment", "DeploymentCache", "CampaignResult",
+    "enumerate_scenarios", "materialise", "run_scenario", "run_campaign",
+    "truth_candidates",
 ]
 
 KINDS = ("core", "link", "router", "none")
@@ -116,6 +141,26 @@ def _mesh_dims(mesh) -> tuple[int, int]:
     if w < 1 or h < 1:
         raise ValueError(f"mesh dimensions must be >= 1, got {w}x{h}")
     return w, h
+
+
+def _normalise_detectors(detectors, baselines) -> tuple[str, ...]:
+    """Resolve the ``detectors=`` request (plus the deprecated
+    ``baselines=`` flag) to a validated, deduplicated name tuple."""
+    if baselines is not None:
+        warnings.warn(
+            "baselines= is deprecated; pass detectors=('sloth', 'thres', "
+            "...) — baselines=True maps to detectors=DEFAULT_DETECTORS",
+            DeprecationWarning, stacklevel=3)
+        if baselines:
+            detectors = DEFAULT_DETECTORS
+    if isinstance(detectors, str):
+        detectors = (detectors,)
+    names = tuple(dict.fromkeys(str(n).lower() for n in detectors))
+    if not names:
+        raise ValueError("detectors must name at least one detector")
+    for n in names:
+        get_detector(n)          # raises KeyError for unknown names
+    return names
 
 
 # ---------------------------------------------------------------------------
@@ -203,36 +248,41 @@ def _scenario_rng(grid: CampaignGrid, s: Scenario) -> np.random.Generator:
 @dataclasses.dataclass
 class Deployment:
     """Shared, read-only per-(workload, mesh) artifacts."""
-    sloth: Sloth
+    sloth: Sloth                   # simulation host (probe plan + traces)
     healthy: SimResult
     used_links: tuple[int, ...]
     used_routers: tuple[int, ...]  # routers with ≥1 used incident link
     probe_overhead: float          # (t_probed / t_unprobed - 1)
-    detectors: tuple = ()          # baseline detectors (optional)
+    detectors: tuple[Detector, ...] = ()   # prepared, in request order
 
 
 class DeploymentCache:
-    """(workload, mesh, config) → :class:`Deployment`, built once.
+    """(workload, mesh, config, detectors) → :class:`Deployment`, built
+    once.
 
     Construction is the expensive part of the grid (graph build, mapping,
-    probe planning, healthy calibration run); caching it means adding
-    scenarios to a campaign costs one simulate+analyse each.  ``cfg=None``
-    is normalised to the default ``SlothConfig()`` before keying, so both
-    spellings share one deployment.
+    probe planning, healthy calibration run, detector preparation);
+    caching it means adding scenarios to a campaign costs one
+    simulate+analyse each.  The cache is layered: the *host* artifacts
+    (SLOTH pipeline, healthy run, used-resource sets, probe-overhead
+    calibration) are keyed on (workload, mesh, cfg) only, and prepared
+    detector instances on (host, name) — so campaigns that differ only in
+    their detector subset or order share both the host and the per-name
+    detectors.  ``cfg=None`` is normalised to the default ``SlothConfig()``
+    before keying, so both spellings share one deployment.
     """
 
     HEALTHY_SEED = 999
 
     def __init__(self):
+        self._hosts: dict[tuple, Deployment] = {}      # detector-free
+        self._detectors: dict[tuple, Detector] = {}
         self._cache: dict[tuple, Deployment] = {}
 
-    def get(self, workload: str, mesh_w: int, mesh_h: int,
-            cfg: SlothConfig | None = None,
-            baselines: bool = False) -> Deployment:
-        cfg = cfg if cfg is not None else SlothConfig()
-        key = (workload, mesh_w, mesh_h, repr(cfg), baselines)
-        dep = self._cache.get(key)
-        if dep is None:
+    def _host(self, workload: str, mesh_w: int, mesh_h: int,
+              cfg: SlothConfig, hostkey: tuple) -> Deployment:
+        host = self._hosts.get(hostkey)
+        if host is None:
             sloth = Sloth(build_workload(workload),
                           Mesh2D(mesh_w, mesh_h), cfg=cfg)
             healthy = sloth.run(None, seed=self.HEALTHY_SEED)
@@ -246,14 +296,43 @@ class DeploymentCache:
                               probes=None).total_time
             t_full = simulate(sloth.mapped, probed_cfg,
                               probes=sloth.plan.sim_plan).total_time
-            dets = tuple(cls(sloth.mesh, healthy)
-                         for cls in B.ALL_BASELINES) if baselines else ()
             routers = {c for lid in used for c in sloth.mesh.links[lid]}
-            dep = Deployment(sloth=sloth, healthy=healthy,
-                             used_links=tuple(sorted(used)),
-                             used_routers=tuple(sorted(routers)),
-                             probe_overhead=t_full / t_none - 1.0,
-                             detectors=dets)
+            host = Deployment(sloth=sloth, healthy=healthy,
+                              used_links=tuple(sorted(used)),
+                              used_routers=tuple(sorted(routers)),
+                              probe_overhead=t_full / t_none - 1.0)
+            self._hosts[hostkey] = host
+        return host
+
+    def get(self, workload: str, mesh_w: int, mesh_h: int,
+            cfg: SlothConfig | None = None,
+            detectors=("sloth",),
+            baselines: bool | None = None) -> Deployment:
+        names = _normalise_detectors(detectors, baselines)
+        cfg = cfg if cfg is not None else SlothConfig()
+        hostkey = (workload, mesh_w, mesh_h, repr(cfg))
+        key = hostkey + (names,)
+        dep = self._cache.get(key)
+        if dep is None:
+            host = self._host(workload, mesh_w, mesh_h, cfg, hostkey)
+            dets = []
+            for n in names:
+                det = self._detectors.get(hostkey + (n,))
+                if det is None:
+                    det = instantiate_detector(n)
+                    if type(det) is SlothDetector:
+                        # the simulation host IS a prepared SLOTH pipeline
+                        # for exactly this (graph, mesh, cfg) — adopt it
+                        # instead of rebuilding an identical one (prepare
+                        # is deterministic, so this changes cost, not
+                        # results)
+                        det.pipeline = host.sloth
+                    else:
+                        det.prepare(host.sloth.graph, host.sloth.mesh,
+                                    host.healthy, cfg)
+                    self._detectors[hostkey + (n,)] = det
+                dets.append(det)
+            dep = dataclasses.replace(host, detectors=tuple(dets))
             self._cache[key] = dep
         return dep
 
@@ -314,50 +393,32 @@ def materialise(grid: CampaignGrid, s: Scenario, dep: Deployment) \
     return tuple(failures), sim_seed
 
 
-def _judge(verdict: Verdict, failures: tuple[FailSlow, ...], mesh: Mesh2D) \
-        -> tuple[bool, int | None, tuple, set[tuple[str, int]]]:
-    """(matched, best_rank, per_failure_ranks, candidate_union) for a
-    verdict against a set of ground truths.  Matching delegates to the
-    shared router-aware rule (``Verdict.matches`` / ``truth_candidates``):
-    matched means the top-1 verdict names *any* injected truth; ranks are
-    1-based positions of each truth in the ranking (``None`` when
-    unranked); the union of acceptable (kind, location) answers is
-    returned so callers can score other detectors by the same rule."""
-    if not failures:
-        return (not verdict.flagged), None, (), set()
-    ranks: list[int | None] = []
-    union: set[tuple[str, int]] = set()
-    for f in failures:
-        cands = truth_candidates(f, mesh)
-        union |= cands
-        rank = None
-        for i, (k, l, _) in enumerate(verdict.ranking):
-            if (k, l) in cands:
-                rank = i + 1
-                break
-        ranks.append(rank)
-    matched = any(verdict.matches(f, mesh) for f in failures)
-    ranked = [r for r in ranks if r is not None]
-    return matched, (min(ranked) if ranked else None), tuple(ranks), union
-
-
 def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
         -> ScenarioOutcome:
-    """Execute one scenario end-to-end against a cached deployment."""
+    """Execute one scenario end-to-end against a cached deployment: one
+    simulation, analysed by every prepared detector, every verdict judged
+    by the shared router-aware rule (:func:`repro.core.failures
+    .judge_verdict`)."""
     failures, sim_seed = materialise(grid, s, dep)
+    t0 = time.perf_counter()
     sim = dep.sloth.run(list(failures) if failures else None, seed=sim_seed)
-    v = dep.sloth.analyse(sim)
-    matched, rank, ranks, cands = _judge(v, failures, dep.sloth.mesh)
-    bl = []
+    sim_wall = time.perf_counter() - t0
+    mesh = dep.sloth.mesh
+    results = []
+    compression = 0.0
+    total_time = float(sim.total_time)
     for det in dep.detectors:
-        bv = det.detect(sim)
-        # judge baselines with the same router-aware any-match rule as
-        # SLOTH (no baseline emits kind='router' either)
-        if not failures:
-            ok = not bv.flagged
-        else:
-            ok = bool(bv.flagged and (bv.kind, bv.location) in cands)
-        bl.append((det.name, bool(bv.flagged), ok))
+        t1 = time.perf_counter()
+        v = det.analyse(sim)
+        wall = time.perf_counter() - t1
+        matched, rank, ranks, _ = judge_verdict(v, failures, mesh)
+        if compression == 0.0 and v.recorder is not None:
+            compression = float(v.recorder.compression_ratio)
+        results.append(DetectorOutcome(
+            detector=det.name, flagged=bool(v.flagged), pred_kind=v.kind,
+            pred_location=v.location, score=float(v.score),
+            matched=matched, truth_rank=rank, truth_ranks=ranks,
+            wall_time=wall))
     return ScenarioOutcome(
         scenario_id=s.scenario_id, workload=s.workload,
         mesh_w=s.mesh_w, mesh_h=s.mesh_h, kind=s.kind,
@@ -366,22 +427,21 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
         truth_locations=tuple(f.location for f in failures),
         truth_t0s=tuple(f.t0 for f in failures),
         truth_durations=tuple(f.duration for f in failures),
-        flagged=bool(v.flagged), pred_kind=v.kind,
-        pred_location=v.location, score=float(v.score),
-        matched=matched, truth_rank=rank, truth_ranks=ranks,
-        compression_ratio=float(v.recorder.compression_ratio),
-        total_time=float(v.total_time),
+        detector_results=tuple(results),
+        compression_ratio=compression,
+        total_time=total_time,
         probe_overhead=float(dep.probe_overhead),
-        baseline_results=tuple(bl),
+        sim_wall_time=sim_wall,
     )
 
 
 def _run_in_worker(grid: CampaignGrid, cfg: SlothConfig | None,
-                   baselines: bool, s: Scenario) -> ScenarioOutcome:
+                   detectors: tuple[str, ...],
+                   s: Scenario) -> ScenarioOutcome:
     """Process-pool entry point: resolve the deployment from this worker
     process's own cache (lazily built), then run the scenario."""
     dep = _WORKER_CACHE.get(s.workload, s.mesh_w, s.mesh_h,
-                            cfg=cfg, baselines=baselines)
+                            cfg=cfg, detectors=detectors)
     return run_scenario(grid, s, dep)
 
 
@@ -392,15 +452,19 @@ def _run_in_worker(grid: CampaignGrid, cfg: SlothConfig | None,
 @dataclasses.dataclass
 class CampaignResult:
     grid: CampaignGrid
+    detectors: tuple[str, ...]             # request order; [0] is primary
     outcomes: list[ScenarioOutcome]
-    metrics: CampaignMetrics
-    cells: dict[tuple, CampaignMetrics]
+    metrics: CampaignMetrics               # primary detector
+    cells: dict[tuple, CampaignMetrics]    # primary detector, per cell
+    detector_metrics: dict[str, CampaignMetrics]
+    detector_cells: dict[str, dict[tuple, CampaignMetrics]]
     probe_overheads: dict[tuple, float]    # (workload, w, h) → overhead
 
     def summary(self) -> str:
         m = self.metrics
         lines = [
             f"scenarios: {m.n_scenarios}",
+            f"primary:   {self.detectors[0]}",
             f"accuracy:  {m.accuracy.pct():.2f}% "
             f"({m.accuracy.successes}/{m.accuracy.trials}, "
             f"CI [{m.accuracy.interval[0]*100:.1f}, "
@@ -420,12 +484,28 @@ class CampaignResult:
             f"(scenario-weighted; unweighted per-deployment "
             f"{m.mean_probe_overhead_unweighted*100:.3f}%)",
         ]
+        if len(self.detectors) > 1:
+            lines.append("per-detector (acc / FPR / top-3 / recall@3):")
+            for name, dm in self.detector_metrics.items():
+                lines.append(
+                    f"  {name:8s} {dm.accuracy.pct():6.2f}% "
+                    f"{dm.fpr.pct():6.2f}% "
+                    f"{dm.topk_rate(3)*100:6.2f}% "
+                    f"{dm.recall_at(3)*100:6.2f}%")
+        wall = wall_time_stats(self.outcomes)
+        if wall:
+            lines.append("wall time per scenario (mean / p95):")
+            for name, w in wall.items():
+                lines.append(f"  {name:8s} {w.mean*1e3:8.2f}ms "
+                             f"{w.p95*1e3:8.2f}ms")
         return "\n".join(lines)
 
 
 def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
                  executor: str = "thread",
-                 cfg: SlothConfig | None = None, baselines: bool = False,
+                 cfg: SlothConfig | None = None,
+                 detectors=("sloth",),
+                 baselines: bool | None = None,
                  cache: DeploymentCache | None = None,
                  progress=None) -> CampaignResult:
     """Run every scenario of ``grid`` and aggregate paper-style metrics.
@@ -434,14 +514,19 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
     ``executor`` — ``'thread'`` (shared deployments, GIL-bound) or
     ``'process'`` (per-worker deployment caches, true multi-core; see the
     module docstring).  Outcomes are **bit-identical** across executors and
-    worker counts.  ``baselines`` additionally runs the five baseline
-    detectors on each scenario's trace.  ``cache`` — share deployments
-    across campaigns (defaults to a process-wide cache; ignored by
-    process-pool workers, which keep their own).
+    worker counts.  ``detectors`` — registry names analysing every
+    scenario's trace; the first is the primary detector for the top-level
+    ``metrics``/``cells`` (per-detector tables are in
+    ``detector_metrics``/``detector_cells``).  ``baselines`` is a
+    deprecated alias: ``True`` maps to ``detectors=DEFAULT_DETECTORS``.
+    ``cache`` — share deployments across campaigns (defaults to a
+    process-wide cache; ignored by process-pool workers, which keep their
+    own).
     """
     if executor not in EXECUTORS:
         raise ValueError(f"unknown executor {executor!r}; "
                          f"options: {EXECUTORS}")
+    names = _normalise_detectors(detectors, baselines)
     scenarios = enumerate_scenarios(grid)
     workers = (os.cpu_count() or 1) if workers is None else workers
     parallel = workers > 1 and len(scenarios) > 1
@@ -451,7 +536,7 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
         # thread pools make fork() after first use prone to deadlock.
         # Workers re-import the package cleanly (sys.path is inherited).
         ctx = multiprocessing.get_context("spawn")
-        fn = functools.partial(_run_in_worker, grid, cfg, baselines)
+        fn = functools.partial(_run_in_worker, grid, cfg, names)
         outcomes = []
         with ProcessPoolExecutor(max_workers=workers,
                                  mp_context=ctx) as pool:
@@ -469,7 +554,7 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
             k = (s.workload, s.mesh_w, s.mesh_h)
             if k not in deps:
                 deps[k] = cache.get(s.workload, s.mesh_w, s.mesh_h,
-                                    cfg=cfg, baselines=baselines)
+                                    cfg=cfg, detectors=names)
 
         def run_one(s: Scenario) -> ScenarioOutcome:
             o = run_scenario(grid, s,
@@ -484,9 +569,14 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
         else:
             outcomes = [run_one(s) for s in scenarios]
 
+    det_metrics = by_detector(outcomes)
+    det_cells = detector_cells(outcomes)
+    primary = names[0]
     return CampaignResult(
-        grid=grid, outcomes=outcomes,
-        metrics=aggregate(outcomes),
-        cells=by_cell(outcomes),
+        grid=grid, detectors=names, outcomes=outcomes,
+        metrics=(det_metrics[primary] if outcomes else aggregate(outcomes)),
+        cells=det_cells.get(primary, {}),
+        detector_metrics=det_metrics,
+        detector_cells=det_cells,
         probe_overheads=deployment_overheads(outcomes),
     )

@@ -41,6 +41,39 @@ def truth_candidates(failure: FailSlow, mesh: Mesh2D) \
     return {(failure.kind, failure.location)}
 
 
+def judge_verdict(verdict, failures, mesh: Mesh2D) \
+        -> tuple[bool, int | None, tuple, set[tuple[str, int]]]:
+    """(matched, best_rank, per_failure_ranks, candidate_union) for one
+    verdict against a set of ground truths — the single judging rule every
+    detector is scored by.
+
+    ``verdict`` is any unified :class:`~repro.core.detectors.Verdict`
+    (duck-typed: ``flagged``, ``ranking``, ``matches``).  Matching is
+    router-aware via :func:`truth_candidates`: matched means the top-1
+    verdict names *any* injected truth; ranks are 1-based positions of
+    each truth in the ranking (``None`` when unranked); the union of
+    acceptable (kind, location) answers is returned for callers that score
+    auxiliary signals by the same rule.  An empty ``failures`` tuple is a
+    negative sample: matched ⇔ not flagged.
+    """
+    if not failures:
+        return (not verdict.flagged), None, (), set()
+    ranks: list[int | None] = []
+    union: set[tuple[str, int]] = set()
+    for f in failures:
+        cands = truth_candidates(f, mesh)
+        union |= cands
+        rank = None
+        for i, (k, l, _) in enumerate(verdict.ranking):
+            if (k, l) in cands:
+                rank = i + 1
+                break
+        ranks.append(rank)
+    matched = any(verdict.matches(f, mesh) for f in failures)
+    ranked = [r for r in ranks if r is not None]
+    return matched, (min(ranked) if ranked else None), tuple(ranks), union
+
+
 @dataclasses.dataclass(frozen=True)
 class Sample:
     """One evaluation sample: zero or one injected failure."""

@@ -5,6 +5,18 @@ runner (``campaign.py``) produces one :class:`ScenarioOutcome` per injected
 (or failure-free) scenario; this module turns a list of outcomes into the
 paper-style aggregates.
 
+Unified-detector layout
+-----------------------
+Every scenario's trace is analysed by **all** requested detectors (the
+campaign's ``detectors=("sloth", "thres", ...)`` axis), so a
+:class:`ScenarioOutcome` carries one :class:`DetectorOutcome` per detector
+— flagged / top-1 prediction / router-aware match / per-truth ranks / wall
+time — all judged by the single rule in
+:func:`repro.core.failures.judge_verdict`.  Each aggregate therefore takes
+a ``detector=`` selector (default: the campaign's *primary* detector, the
+first one requested), and :func:`by_detector` / :func:`detector_cells`
+produce the full SLOTH-vs-baselines table in one pass.
+
 A scenario may carry **several simultaneous injected failures** (the grid's
 ``n_failures`` axis): ground truth is therefore a *tuple* of truths
 (``truth_locations`` / ``truth_t0s`` / ``truth_durations``, all empty for
@@ -13,8 +25,7 @@ negatives), each with its own 1-based rank in the verdict's ranking
 
 * **accuracy (any-match)** — fraction of *positive* scenarios whose top-1
   verdict names any of the injected root causes (router failures accept any
-  link of the slowed router, since the detector localises at link
-  granularity),
+  link of the slowed router, since detectors localise at link granularity),
 * **FPR** — fraction of *negative* (failure-free) scenarios that were
   flagged,
 * **top-k localisation rate** — fraction of positives with *some* ground
@@ -26,7 +37,11 @@ negatives), each with its own 1-based rank in the verdict's ranking
   a per-deployment quantity; the headline mean weights each deployment by
   the number of scenarios it served (``mean_probe_overhead``), with the
   unweighted per-deployment mean kept alongside
-  (``mean_probe_overhead_unweighted``).
+  (``mean_probe_overhead_unweighted``),
+* **wall-time telemetry** — per-detector analyse time and per-scenario
+  simulate time (:func:`wall_time_stats`: mean / p95 / total).  Wall
+  times are measurements, not results: they are excluded from outcome
+  equality so executor-equivalence comparisons stay bit-exact.
 
 Binomial rates carry Wilson score confidence intervals so small grid cells
 report honest uncertainty.  Everything here is plain float arithmetic in a
@@ -37,13 +52,36 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorOutcome:
+    """One detector's judged verdict for one scenario.  Plain scalars and
+    tuples only — picklable across process-pool boundaries.  ``wall_time``
+    (seconds spent in ``analyse``) is telemetry and excluded from
+    equality."""
+    detector: str              # registry name ('sloth', 'thres', ...)
+    flagged: bool
+    pred_kind: str | None      # top-1 prediction ('core' | 'link')
+    pred_location: int | None
+    score: float
+    matched: bool              # top-1 matches any truth (router-aware)
+    truth_rank: int | None     # best 1-based rank over truths, or None
+    # per-failure rank (int | None), aligned with the scenario's
+    # truth_locations
+    truth_ranks: tuple = ()
+    wall_time: float = dataclasses.field(default=0.0, compare=False)
 
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioOutcome:
     """Result of one campaign scenario (the exchange record between the
-    runner and the aggregators).  Picklable: plain scalars and tuples only,
-    so outcomes cross process boundaries under ``executor='process'``."""
+    runner and the aggregators).  Picklable: plain scalars, tuples and
+    :class:`DetectorOutcome` tuples only, so outcomes cross process
+    boundaries under ``executor='process'``.  ``sim_wall_time`` is
+    telemetry (excluded from equality, like ``DetectorOutcome.wall_time``).
+    """
     scenario_id: int
     workload: str
     mesh_w: int
@@ -57,25 +95,59 @@ class ScenarioOutcome:
     truth_locations: tuple[int, ...]
     truth_t0s: tuple[float, ...]
     truth_durations: tuple[float, ...]
-    # verdict
-    flagged: bool
-    pred_kind: str | None
-    pred_location: int | None
-    score: float
-    matched: bool              # top-1 matches any truth (router-aware)
-    truth_rank: int | None     # best 1-based rank over truths, or None
+    # one judged verdict per requested detector, in request order (the
+    # first entry is the campaign's primary detector)
+    detector_results: tuple[DetectorOutcome, ...]
     # accounting
-    compression_ratio: float
+    compression_ratio: float   # recorder compression (0.0 if no detector
+    #                            produced recorder artifacts)
     total_time: float
     probe_overhead: float          # of the deployment that ran the scenario
-    # per-failure rank (int | None), aligned with truth_locations; sits
-    # after the required fields only because it carries a default
-    truth_ranks: tuple = ()
-    baseline_results: tuple = ()   # ((name, flagged, matched), ...)
+    sim_wall_time: float = dataclasses.field(default=0.0, compare=False)
 
     @property
     def positive(self) -> bool:
         return self.kind != "none"
+
+    # -- primary-detector convenience views --------------------------------
+    @property
+    def primary(self) -> DetectorOutcome:
+        return self.detector_results[0]
+
+    @property
+    def flagged(self) -> bool:
+        return self.primary.flagged
+
+    @property
+    def pred_kind(self) -> str | None:
+        return self.primary.pred_kind
+
+    @property
+    def pred_location(self) -> int | None:
+        return self.primary.pred_location
+
+    @property
+    def score(self) -> float:
+        return self.primary.score
+
+    @property
+    def matched(self) -> bool:
+        return self.primary.matched
+
+    @property
+    def truth_rank(self) -> int | None:
+        return self.primary.truth_rank
+
+    @property
+    def truth_ranks(self) -> tuple:
+        return self.primary.truth_ranks
+
+    @property
+    def baseline_results(self) -> tuple:
+        """Deprecated view: ``(name, flagged, matched)`` tuples for every
+        non-primary detector (the old ``baselines=True`` payload)."""
+        return tuple((d.detector, d.flagged, d.matched)
+                     for d in self.detector_results[1:])
 
     # -- single-failure convenience views (first truth or None) ------------
     @property
@@ -89,6 +161,19 @@ class ScenarioOutcome:
     @property
     def duration(self) -> float | None:
         return self.truth_durations[0] if self.truth_durations else None
+
+    def result_for(self, detector: str | None) -> DetectorOutcome:
+        """This scenario's :class:`DetectorOutcome` for ``detector``
+        (``None`` → primary)."""
+        if detector is None:
+            return self.detector_results[0]
+        for d in self.detector_results:
+            if d.detector == detector:
+                return d
+        raise KeyError(
+            f"scenario {self.scenario_id} carries no verdict for "
+            f"detector {detector!r}; ran: "
+            f"{tuple(d.detector for d in self.detector_results)}")
 
     def cell(self) -> tuple:
         return (self.workload, self.mesh_w, self.mesh_h, self.kind,
@@ -130,7 +215,8 @@ def wilson_interval(k: int, n: int, z: float = 1.96) -> tuple[float, float]:
 
 @dataclasses.dataclass(frozen=True)
 class CampaignMetrics:
-    """Aggregate metrics over a set of scenario outcomes."""
+    """Aggregate metrics over a set of scenario outcomes, for one
+    detector."""
     n_scenarios: int
     accuracy: BinomialStat          # any-match, over positives
     fpr: BinomialStat               # over negatives
@@ -153,11 +239,36 @@ class CampaignMetrics:
         raise KeyError(k)
 
 
-def topk_stat(outcomes: list[ScenarioOutcome], k: int) -> BinomialStat:
+@dataclasses.dataclass(frozen=True)
+class WallTimeStat:
+    """Telemetry summary of a wall-time population (seconds)."""
+    mean: float
+    p95: float
+    total: float
+    n: int
+
+
+def _p95(xs: list[float]) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[max(0, math.ceil(0.95 * len(xs)) - 1)]
+
+
+def detectors_in(outcomes: list[ScenarioOutcome]) -> tuple[str, ...]:
+    """Detector names present in ``outcomes``, in request order."""
+    return (tuple(d.detector for d in outcomes[0].detector_results)
+            if outcomes else ())
+
+
+def topk_stat(outcomes: list[ScenarioOutcome], k: int,
+              detector: str | None = None) -> BinomialStat:
     """Scenario-level: some truth ranked within the top k."""
     pos = [o for o in outcomes if o.positive]
-    hits = sum(1 for o in pos
-               if o.truth_rank is not None and o.truth_rank <= k)
+    hits = 0
+    for o in pos:
+        r = o.result_for(detector).truth_rank
+        hits += int(r is not None and r <= k)
     return BinomialStat(hits, len(pos))
 
 
@@ -172,34 +283,42 @@ def deployment_overheads(outcomes: list[ScenarioOutcome]) \
     return dep_ov
 
 
-def recall_stat(outcomes: list[ScenarioOutcome], k: int) -> BinomialStat:
+def recall_stat(outcomes: list[ScenarioOutcome], k: int,
+                detector: str | None = None) -> BinomialStat:
     """Failure-level recall@k: each injected failure of each positive
     scenario is one trial; a hit is that failure's own truth ranked ≤ k."""
     hits = trials = 0
     for o in outcomes:
         if not o.positive:
             continue
-        for r in o.truth_ranks:
+        for r in o.result_for(detector).truth_ranks:
             trials += 1
             hits += int(r is not None and r <= k)
     return BinomialStat(hits, trials)
 
 
 def aggregate(outcomes: list[ScenarioOutcome],
-              ks: tuple[int, ...] = (1, 3, 5)) -> CampaignMetrics:
-    """Reduce outcomes to campaign metrics.
+              ks: tuple[int, ...] = (1, 3, 5),
+              detector: str | None = None) -> CampaignMetrics:
+    """Reduce outcomes to campaign metrics for one detector (``None`` →
+    the primary, i.e. first-requested, detector).
 
     Positives feed accuracy/top-k/recall; negatives feed FPR only — a grid
     cell with ``kind='none'`` therefore contributes zero accuracy trials.
+    Compression is averaged over outcomes that produced recorder artifacts.
     Probe overhead is aggregated both scenario-weighted (each outcome
     contributes its deployment's overhead) and unweighted over the distinct
-    deployments that appear in ``outcomes``.
+    deployments that appear in ``outcomes``; both are per-deployment
+    quantities independent of the detector selector.
     """
     pos = [o for o in outcomes if o.positive]
     neg = [o for o in outcomes if not o.positive]
-    acc = BinomialStat(sum(o.matched for o in pos), len(pos))
-    fpr = BinomialStat(sum(o.flagged for o in neg), len(neg))
-    comp = [o.compression_ratio for o in outcomes]
+    acc = BinomialStat(sum(o.result_for(detector).matched for o in pos),
+                       len(pos))
+    fpr = BinomialStat(sum(o.result_for(detector).flagged for o in neg),
+                       len(neg))
+    comp = [o.compression_ratio for o in outcomes
+            if o.compression_ratio > 0]
     mean_comp = sum(comp) / len(comp) if comp else 0.0
     ov = [o.probe_overhead for o in outcomes]
     mean_ov = sum(ov) / len(ov) if ov else 0.0
@@ -209,39 +328,70 @@ def aggregate(outcomes: list[ScenarioOutcome],
         n_scenarios=len(outcomes),
         accuracy=acc,
         fpr=fpr,
-        topk=tuple((k, topk_stat(outcomes, k)) for k in ks),
-        recall=tuple((k, recall_stat(outcomes, k)) for k in ks),
+        topk=tuple((k, topk_stat(outcomes, k, detector)) for k in ks),
+        recall=tuple((k, recall_stat(outcomes, k, detector)) for k in ks),
         mean_compression=mean_comp,
         mean_probe_overhead=mean_ov,
         mean_probe_overhead_unweighted=mean_ov_unw,
     )
 
 
+def by_detector(outcomes: list[ScenarioOutcome],
+                ks: tuple[int, ...] = (1, 3, 5)) \
+        -> dict[str, CampaignMetrics]:
+    """Per-detector campaign metrics, in detector request order — the
+    SLOTH-vs-baselines comparison table in one reduction."""
+    return {name: aggregate(outcomes, ks=ks, detector=name)
+            for name in detectors_in(outcomes)}
+
+
 def by_cell(outcomes: list[ScenarioOutcome],
-            ks: tuple[int, ...] = (1, 3, 5)) \
+            ks: tuple[int, ...] = (1, 3, 5),
+            detector: str | None = None) \
         -> dict[tuple, CampaignMetrics]:
-    """Per-cell aggregation, keyed (workload, mesh_w, mesh_h, kind,
-    severity, n_failures).  Cells appear in first-occurrence (enumeration)
-    order."""
+    """Per-cell aggregation for one detector, keyed (workload, mesh_w,
+    mesh_h, kind, severity, n_failures).  Cells appear in first-occurrence
+    (enumeration) order."""
     cells: dict[tuple, list[ScenarioOutcome]] = {}
     for o in outcomes:
         cells.setdefault(o.cell(), []).append(o)
-    return {c: aggregate(v, ks=ks) for c, v in cells.items()}
+    return {c: aggregate(v, ks=ks, detector=detector)
+            for c, v in cells.items()}
+
+
+def detector_cells(outcomes: list[ScenarioOutcome],
+                   ks: tuple[int, ...] = (1, 3, 5)) \
+        -> dict[str, dict[tuple, CampaignMetrics]]:
+    """Per-detector per-cell metrics: ``{detector: {cell: metrics}}`` —
+    every accuracy/FPR/top-k number of the paper's comparison tables."""
+    return {name: by_cell(outcomes, ks=ks, detector=name)
+            for name in detectors_in(outcomes)}
+
+
+def wall_time_stats(outcomes: list[ScenarioOutcome]) \
+        -> dict[str, WallTimeStat]:
+    """Wall-time telemetry per detector (analyse time), plus the
+    ``'simulate'`` key for trace generation.  Telemetry only: these values
+    vary run-to-run and never participate in outcome equality."""
+    out: dict[str, WallTimeStat] = {}
+    sims = [o.sim_wall_time for o in outcomes]
+    if sims:
+        out["simulate"] = WallTimeStat(sum(sims) / len(sims), _p95(sims),
+                                       sum(sims), len(sims))
+    for name in detectors_in(outcomes):
+        xs = [o.result_for(name).wall_time for o in outcomes]
+        out[name] = WallTimeStat(sum(xs) / len(xs), _p95(xs), sum(xs),
+                                 len(xs))
+    return out
 
 
 def baseline_stats(outcomes: list[ScenarioOutcome]) \
         -> dict[str, tuple[BinomialStat, BinomialStat]]:
-    """Per-baseline (accuracy, fpr) over outcomes that carry baseline
-    verdicts (campaign run with ``baselines=True``)."""
-    acc: dict[str, list[int]] = {}
-    fpr: dict[str, list[int]] = {}
-    for o in outcomes:
-        for name, flagged, matched in o.baseline_results:
-            if o.positive:
-                acc.setdefault(name, []).append(int(matched))
-            else:
-                fpr.setdefault(name, []).append(int(flagged))
-    names = sorted(set(acc) | set(fpr))
-    return {n: (BinomialStat(sum(acc.get(n, [])), len(acc.get(n, []))),
-                BinomialStat(sum(fpr.get(n, [])), len(fpr.get(n, []))))
-            for n in names}
+    """Deprecated: per-detector (accuracy, fpr) over the non-primary
+    detectors.  Use :func:`by_detector`, which covers every detector and
+    the full metric set."""
+    warnings.warn("baseline_stats is deprecated; use by_detector()",
+                  DeprecationWarning, stacklevel=2)
+    return {name: (m.accuracy, m.fpr)
+            for name, m in by_detector(outcomes).items()
+            if outcomes and name != outcomes[0].primary.detector}

@@ -1,4 +1,6 @@
-"""End-to-end SLOTH pipeline (Figure 4).
+"""SLOTH, as a registered :class:`~repro.core.detectors.Detector`.
+
+End-to-end pipeline (Figure 4):
 
     workload + arch config + probe config + failure model
         → SL-Compiler (probe plan)
@@ -6,19 +8,37 @@
         → SL-Recorder (Fail-Slow Sketch compression)
         → SL-Tracer (core/link detection → MCG → FailRank)
         → ranked root causes + storage/overhead accounting
+
+Two entry points:
+
+* :class:`Sloth` — the full pipeline bound to one (workload graph, mesh)
+  deployment.  It both *generates* instrumented traces (``run``) and
+  *analyses* them (``analyse → Verdict``); the campaign layer uses it as
+  the simulation host for every detector.
+* :class:`SlothDetector` — the registry adapter implementing the unified
+  detector protocol (``prepare(graph, mesh, profile, cfg)`` /
+  ``analyse(sim)``), registered under ``"sloth"`` so
+  ``get_detector("sloth")`` and ``run_campaign(..., detectors=("sloth",
+  ...))`` treat SLOTH exactly like any baseline.
+
+Verdicts are the unified :class:`~repro.core.detectors.Verdict` (re-exported
+here for compatibility): ranked candidates, mesh-aware ``matches`` and the
+recorder / FailRank / MCG artifacts.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
 from .compiler import plan_probes
 from .detection import detect_cores, detect_links
+from .detectors import Verdict, _register_builtin
 from .failrank import FailRankParams, FailRankResult, attribute_links, \
     failrank
-from .failures import FailSlow, truth_candidates
+from .failures import FailSlow
 from .graph import CompGraph
 from .mapping import MappedGraph, map_graph
 from .mcg import MCG, build_mcg
@@ -26,6 +46,8 @@ from .recorder import RecorderOutput, record
 from .routing import Mesh2D
 from .simulator import SimConfig, SimResult, calibrate, simulate
 from .sketch import SketchParams
+
+__all__ = ["SlothConfig", "Verdict", "Sloth", "SlothDetector"]
 
 
 @dataclasses.dataclass
@@ -38,48 +60,38 @@ class SlothConfig:
     link_ratio_flag: float = 3.0
     detect_threshold: float = 0.55   # min initial prob to report a failure
     instr_per_task: int = 64
+    # -- mesh-size-aware flag scaling --------------------------------------
+    # The flag thresholds are calibrated on the paper's 4×4 chip (16 cores,
+    # 48 links).  The expected extreme of a *healthy* population grows with
+    # the number of resources examined (≈ √(2·ln N) for the core z-scores,
+    # and empirically ≈ log-linear for the link slowdown ratios), so fixed
+    # thresholds false-flag on large meshes — the 12×12 ``none`` cell
+    # famously flagged a healthy link at the defaults.  Scaling the flags
+    # by ln(resources / reference) keeps the healthy extreme below the
+    # flag at every mesh size while 10× failures stay far above it.  Set
+    # the per-log coefficients to 0 to recover fixed thresholds.
+    ref_cores: int = 16
+    ref_links: int = 48
+    core_z_per_log: float = 0.75
+    link_ratio_per_log: float = 2.2
 
+    def effective_core_z(self, n_cores: int) -> float:
+        """Core z flag scaled for a mesh of ``n_cores`` cores."""
+        excess = math.log(max(n_cores, 1) / self.ref_cores)
+        return self.core_z_flag + self.core_z_per_log * max(0.0, excess)
 
-@dataclasses.dataclass
-class Verdict:
-    flagged: bool
-    kind: str | None              # 'core' | 'link'
-    location: int | None
-    score: float
-    ranking: list[tuple[str, int, float]]   # top candidates
-    recorder: RecorderOutput
-    failrank: FailRankResult
-    mcg: MCG
-    total_time: float
-    # every resource whose detection evidence clears the flag threshold,
-    # sorted by raw evidence — the multi-failure report.  The verdict's
-    # kind/location additionally weigh FailRank attribution, so the two
-    # orderings may disagree on which resource comes first.
-    flagged_resources: tuple[tuple[str, int, float], ...] = ()
-    mesh: Mesh2D | None = dataclasses.field(
-        default=None, repr=False, compare=False)
-
-    def matches(self, failure: FailSlow | None,
-                mesh: Mesh2D | None = None) -> bool:
-        """Correctness of this verdict against ground truth, router-aware:
-        a router truth is matched by any link of the slowed router (the
-        detector only localises cores and links)."""
-        if failure is None:
-            return not self.flagged
-        if not self.flagged:
-            return False
-        mesh = mesh if mesh is not None else self.mesh
-        if mesh is None:
-            if failure.kind == "router":
-                raise ValueError(
-                    "judging a router truth needs the mesh topology; pass "
-                    "mesh= or use a Verdict produced by Sloth.analyse")
-            return (self.kind, self.location) == failure.label()
-        return (self.kind, self.location) in truth_candidates(failure, mesh)
+    def effective_link_ratio(self, n_links: int) -> float:
+        """Link slowdown-ratio flag scaled for a mesh of ``n_links``
+        links."""
+        excess = math.log(max(n_links, 1) / self.ref_links)
+        return (self.link_ratio_flag
+                + self.link_ratio_per_log * max(0.0, excess))
 
 
 class Sloth:
-    """SLOTH detector bound to one (workload graph, mesh) deployment."""
+    """SLOTH pipeline bound to one (workload graph, mesh) deployment."""
+
+    name = "sloth"
 
     def __init__(self, graph: CompGraph, mesh: Mesh2D,
                  cfg: SlothConfig | None = None,
@@ -104,11 +116,13 @@ class Sloth:
         cfg = self.cfg
         rec = record(sim, cfg.sketch, instr_per_task=cfg.instr_per_task,
                      hop_latency=self.sim_cfg.hop_latency)
+        core_z = cfg.effective_core_z(self.mesh.n_cores)
+        link_ratio = cfg.effective_link_ratio(self.mesh.n_links)
         core_cands = detect_cores(rec.comp_patterns, sim.total_time,
-                                  cfg.n_windows, cfg.core_z_flag)
+                                  cfg.n_windows, core_z)
         link_inf = detect_links(rec.comm_patterns, self.mesh, sim.total_time,
                                 cfg.n_windows, self.sim_cfg.hop_latency,
-                                cfg.link_ratio_flag)
+                                link_ratio)
         mcg = build_mcg(rec.comm_patterns, self.mesh, sim.total_time,
                         core_cands, link_inf, cfg.n_windows)
         fr = failrank(mcg, cfg.failrank)
@@ -169,8 +183,36 @@ class Sloth:
                        ranking=ranking, recorder=rec, failrank=fr, mcg=mcg,
                        total_time=sim.total_time,
                        flagged_resources=tuple(flagged_res),
-                       mesh=self.mesh)
+                       mesh=self.mesh, detector=self.name)
 
     def detect(self, failures: list[FailSlow] | None = None,
                seed: int = 0) -> Verdict:
         return self.analyse(self.run(failures=failures, seed=seed))
+
+
+class SlothDetector:
+    """Registry adapter: SLOTH under the unified detector protocol.
+
+    ``prepare`` builds the full pipeline for the deployment (``profile`` is
+    unused — SLOTH calibrates from the workload's FLOP volume, not from a
+    profiling run); ``analyse`` delegates to the pipeline.
+    """
+
+    name = "sloth"
+
+    def __init__(self):
+        self.pipeline: Sloth | None = None
+
+    def prepare(self, graph: CompGraph, mesh: Mesh2D,
+                profile: SimResult | None = None,
+                cfg: SlothConfig | None = None) -> "SlothDetector":
+        self.pipeline = Sloth(graph, mesh, cfg=cfg)
+        return self
+
+    def analyse(self, sim: SimResult) -> Verdict:
+        if self.pipeline is None:
+            raise RuntimeError("SlothDetector.analyse before prepare()")
+        return self.pipeline.analyse(sim)
+
+
+_register_builtin("sloth", SlothDetector)

@@ -217,23 +217,27 @@ def test_materialise_rejects_unusable_kind():
 def test_baselines_judged_router_aware():
     """Baseline verdicts naming a slowed router's link count as matches
     (no detector emits kind='router')."""
+    from repro.core.detectors import DEFAULT_DETECTORS
     g = dataclasses.replace(SMALL, kinds=("router",), reps=1)
-    res = run_campaign(g, workers=0, baselines=True,
+    res = run_campaign(g, workers=0, detectors=DEFAULT_DETECTORS,
                        cache=DeploymentCache())
     (o,) = res.outcomes
-    assert len(o.baseline_results) == 5
-    for name, flagged, matched in o.baseline_results:
-        if matched:                  # a match implies the detector flagged
-            assert flagged
+    assert tuple(d.detector for d in o.detector_results) \
+        == DEFAULT_DETECTORS
+    assert len(o.baseline_results) == 5       # deprecated view: non-primary
+    for d in o.detector_results:
+        if d.matched:                # a match implies the detector flagged
+            assert d.flagged
 
 
 def test_deployment_cache_reused():
+    from repro.core.detectors import DEFAULT_DETECTORS
     cache = DeploymentCache()
     a = cache.get("darknet19", 4, 4)
     b = cache.get("darknet19", 4, 4)
     assert a is b
-    c = cache.get("darknet19", 4, 4, baselines=True)
-    assert c is not a and len(c.detectors) == 5
+    c = cache.get("darknet19", 4, 4, detectors=DEFAULT_DETECTORS)
+    assert c is not a and len(c.detectors) == 6
 
 
 def test_deployment_cache_normalises_default_cfg():

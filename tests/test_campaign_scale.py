@@ -10,8 +10,8 @@ from repro.core.campaign import (CampaignGrid, DeploymentCache,
                                  enumerate_scenarios, materialise,
                                  run_campaign)
 from repro.core.failures import FailSlow
-from repro.core.metrics import (ScenarioOutcome, aggregate, recall_stat,
-                                topk_stat)
+from repro.core.metrics import (DetectorOutcome, ScenarioOutcome, aggregate,
+                                recall_stat, topk_stat)
 from repro.core.routing import Mesh2D
 from repro.core.simulator import simulate
 
@@ -125,18 +125,22 @@ def test_recall_at_k_in_summary(serial_result):
 # ---------------------------------------------------------------------------
 
 def _outcome(i, kind="core", truth_ranks=(), matched=False, flagged=True,
-             workload="wl", mesh=(4, 4), probe_overhead=0.0):
+             workload="wl", mesh=(4, 4), probe_overhead=0.0,
+             detector="sloth"):
     n = len(truth_ranks)
     ranked = [r for r in truth_ranks if r is not None]
+    det = DetectorOutcome(
+        detector=detector, flagged=flagged, pred_kind="core",
+        pred_location=0, score=1.0, matched=matched,
+        truth_rank=min(ranked) if ranked else None,
+        truth_ranks=tuple(truth_ranks))
     return ScenarioOutcome(
         scenario_id=i, workload=workload, mesh_w=mesh[0], mesh_h=mesh[1],
         kind=kind, severity=8.0 if kind != "none" else 0.0,
         n_failures=n, rep=0, sim_seed=i,
         truth_locations=tuple(range(n)), truth_t0s=(0.0,) * n,
-        truth_durations=(1.0,) * n, flagged=flagged, pred_kind="core",
-        pred_location=0, score=1.0, matched=matched,
-        truth_rank=min(ranked) if ranked else None,
-        truth_ranks=tuple(truth_ranks), compression_ratio=10.0,
+        truth_durations=(1.0,) * n, detector_results=(det,),
+        compression_ratio=10.0,
         total_time=1.0, probe_overhead=probe_overhead)
 
 

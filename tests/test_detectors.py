@@ -1,0 +1,367 @@
+"""Unified detector API: registry round-trips, the one Verdict across
+SLOTH and the baselines, router-aware baseline matching, deprecation
+shims, executor equivalence for multi-detector campaigns, mesh-size-aware
+thresholds, and wall-time telemetry."""
+
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.core.baselines import BASELINE_NAMES, BaselineVerdict, Thres
+from repro.core.campaign import (CampaignGrid, DeploymentCache,
+                                 run_campaign)
+from repro.core.detectors import (DEFAULT_DETECTORS, Verdict,
+                                  available_detectors, get_detector,
+                                  prepare_detector, register_detector)
+from repro.core.failures import FailSlow, judge_verdict
+from repro.core.graph import build_workload
+from repro.core.metrics import (DetectorOutcome, by_detector,
+                                detector_cells, wall_time_stats)
+from repro.core.routing import Mesh2D
+from repro.core.sloth import Sloth, SlothConfig
+
+TINY = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                    kinds=("core", "link", "router", "none"),
+                    severities=(8.0,), reps=1, campaign_seed=31)
+
+
+@pytest.fixture(scope="module")
+def sloth():
+    return Sloth(build_workload("darknet19"), Mesh2D(4))
+
+
+@pytest.fixture(scope="module")
+def two_detector_serial():
+    return run_campaign(TINY, workers=0, detectors=("sloth", "thres"),
+                        cache=DeploymentCache())
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtins_registered_in_order():
+    names = available_detectors()
+    assert names[:6] == DEFAULT_DETECTORS
+    assert DEFAULT_DETECTORS == ("sloth",) + BASELINE_NAMES
+
+
+def test_unknown_detector_rejected():
+    with pytest.raises(KeyError, match="unknown detector 'gremlin'"):
+        get_detector("gremlin")
+    with pytest.raises(KeyError, match="available"):
+        run_campaign(TINY, workers=0, detectors=("sloth", "gremlin"))
+
+
+def test_register_detector_round_trip(sloth):
+    class Oracle:
+        """Trivial custom detector: never flags."""
+        name = "test-oracle"
+
+        def prepare(self, graph, mesh, profile, cfg=None):
+            self.mesh = mesh
+            return self
+
+        def analyse(self, sim):
+            return Verdict(flagged=False, kind=None, location=None,
+                           score=0.0, total_time=sim.total_time,
+                           mesh=self.mesh, detector=self.name)
+
+    register_detector("test-oracle", Oracle, overwrite=True)
+    try:
+        assert "test-oracle" in available_detectors()
+        with pytest.raises(ValueError, match="already registered"):
+            register_detector("test-oracle", Oracle)
+        det = prepare_detector("test-oracle", sloth.graph, sloth.mesh,
+                               sloth.run(None, seed=0))
+        v = det.analyse(sloth.run(None, seed=1))
+        assert not v.flagged and v.detector == "test-oracle"
+        # a registered extension flows through the campaign unchanged
+        g = dataclasses.replace(TINY, kinds=("none",))
+        res = run_campaign(g, workers=0,
+                           detectors=("sloth", "test-oracle"),
+                           cache=DeploymentCache())
+        assert res.detectors == ("sloth", "test-oracle")
+        assert res.detector_metrics["test-oracle"].fpr.successes == 0
+    finally:
+        from repro.core import detectors as D
+        D._REGISTRY.pop("test-oracle", None)
+
+
+def test_get_detector_case_insensitive():
+    assert get_detector("SLOTH") is get_detector("sloth")
+
+
+def test_registry_name_contract_enforced():
+    """A factory whose instances report a different .name than their
+    registry key is rejected at instantiation — outcome tables are keyed
+    on .name, so a mismatch would otherwise crash aggregation."""
+    class Misnamed:
+        name = "Oracle"                      # key will be 'oracle'
+
+        def prepare(self, graph, mesh, profile, cfg=None):
+            return self
+
+        def analyse(self, sim):
+            raise NotImplementedError
+
+    register_detector("oracle", Misnamed, overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="must match"):
+            run_campaign(dataclasses.replace(TINY, kinds=("none",)),
+                         workers=0, detectors=("oracle",),
+                         cache=DeploymentCache())
+    finally:
+        from repro.core import detectors as D
+        D._REGISTRY.pop("oracle", None)
+
+
+def test_detectors_accepts_lone_string():
+    g = dataclasses.replace(TINY, kinds=("none",))
+    res = run_campaign(g, workers=0, detectors="thres",
+                       cache=DeploymentCache())
+    assert res.detectors == ("thres",)
+
+
+def test_deployment_reuses_host_pipeline_for_sloth():
+    cache = DeploymentCache()
+    dep = cache.get("darknet19", 4, 4, detectors=("sloth", "thres"))
+    assert dep.detectors[0].pipeline is dep.sloth
+    # detector subsets share the expensive host artifacts and the
+    # per-name prepared detector instances
+    other = cache.get("darknet19", 4, 4, detectors=("thres",))
+    assert other is not dep
+    assert other.sloth is dep.sloth and other.healthy is dep.healthy
+    assert other.detectors[0] is dep.detectors[1]
+
+
+def test_builtin_registration_does_not_clobber_user_override():
+    """Built-in modules register with first-registration-wins semantics,
+    so a user's ``register_detector(name, ..., overwrite=True)`` override
+    of a built-in name survives module (re)imports."""
+    from repro.core import detectors as D
+    original = get_detector("thres")
+
+    def custom():                                  # stand-in override
+        raise NotImplementedError
+
+    try:
+        register_detector("thres", custom, overwrite=True)
+        D._register_builtin("thres", Thres)        # what a re-import does
+        assert get_detector("thres") is custom
+    finally:
+        D._REGISTRY["thres"] = original
+    assert get_detector("thres") is original
+
+
+# ---------------------------------------------------------------------------
+# unified Verdict across detectors (router-aware baseline matching)
+# ---------------------------------------------------------------------------
+
+def test_baseline_router_aware_match_regression(sloth):
+    """Regression for the `BaselineVerdict.matches` router bug: a baseline
+    naming any link of a slowed router now matches the router truth.  The
+    old 4-field verdict compared (kind, location) literally, so a baseline
+    could never be credited for a router failure."""
+    profile = sloth.run(None, seed=12345)
+    det = Thres().prepare(sloth.graph, sloth.mesh, profile)
+    router = 5
+    lid = sloth.mesh.links_of_router(router)[0]
+    sim = sloth.run([FailSlow("link", lid, 0.0, 1e9, 10.0)], seed=2)
+    v = det.analyse(sim)
+    assert v.flagged and v.kind == "link"
+    assert v.location in sloth.mesh.links_of_router(router)
+    truth = FailSlow("router", router, 0.0, 1e9, 10.0)
+    assert v.matches(truth)                       # router-aware, mesh-borne
+    # the shared campaign judge agrees
+    matched, rank, ranks, cands = judge_verdict(v, (truth,), sloth.mesh)
+    assert matched and rank == 1 and ranks == (1,)
+    assert (v.kind, v.location) in cands
+    # and a router on the far side of the mesh does not match
+    far = next(c for c in range(sloth.mesh.n_cores)
+               if v.location not in sloth.mesh.links_of_router(c))
+    assert not v.matches(FailSlow("router", far, 0.0, 1e9, 10.0))
+
+
+def test_baselines_return_unified_verdict(sloth):
+    profile = sloth.run(None, seed=12345)
+    sim = sloth.run([FailSlow("core", 5, 1.0, 8.0)], seed=1)
+    for name in BASELINE_NAMES:
+        v = prepare_detector(name, sloth.graph, sloth.mesh,
+                             profile).analyse(sim)
+        assert isinstance(v, Verdict)
+        assert v.detector == name
+        assert v.mesh is sloth.mesh
+        assert v.recorder is None and v.failrank is None and v.mcg is None
+        assert v.total_time == sim.total_time
+        if v.flagged:
+            assert v.ranking == [(v.kind, v.location, v.score)]
+        else:
+            assert v.ranking == []
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_baseline_verdict_shim_warns_and_matches():
+    with pytest.warns(DeprecationWarning, match="BaselineVerdict"):
+        v = BaselineVerdict(True, "core", 5, 2.0)
+    assert isinstance(v, Verdict)
+    assert v.ranking == [("core", 5, 2.0)]
+    assert v.matches(FailSlow("core", 5, 0.0, 1.0, 8.0))
+    assert not v.matches(FailSlow("core", 6, 0.0, 1.0, 8.0))
+    with pytest.warns(DeprecationWarning):
+        assert not BaselineVerdict(False).flagged
+
+
+def test_baseline_detect_alias_warns(sloth):
+    det = Thres().prepare(sloth.graph, sloth.mesh,
+                          sloth.run(None, seed=12345))
+    sim = sloth.run(None, seed=3)
+    with pytest.warns(DeprecationWarning, match="analyse"):
+        v = det.detect(sim)
+    assert v == det.analyse(sim)
+    # the old per-call tuning kwargs still work through the shim
+    from repro.core.baselines import Mscope
+    ms = Mscope().prepare(sloth.graph, sloth.mesh,
+                          sloth.run(None, seed=12345))
+    with pytest.warns(DeprecationWarning):
+        ms.detect(sim, walks=50, seed=1)
+    assert ms.walks == 50 and ms.walk_seed == 1
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(TypeError, match="unexpected keyword"):
+        ms.detect(sim, gremlin=1)
+
+
+def test_run_campaign_baselines_flag_shim(two_detector_serial):
+    g = dataclasses.replace(TINY, kinds=("core",))
+    with pytest.warns(DeprecationWarning, match="baselines= is deprecated"):
+        old = run_campaign(g, workers=0, baselines=True,
+                           cache=DeploymentCache())
+    assert old.detectors == DEFAULT_DETECTORS
+    new = run_campaign(g, workers=0, detectors=DEFAULT_DETECTORS,
+                       cache=DeploymentCache())
+    assert old.outcomes == new.outcomes
+    assert old.detector_metrics == new.detector_metrics
+    with pytest.warns(DeprecationWarning):
+        dep = DeploymentCache().get("darknet19", 4, 4, baselines=True)
+    assert tuple(d.name for d in dep.detectors) == DEFAULT_DETECTORS
+
+
+# ---------------------------------------------------------------------------
+# multi-detector campaigns: executor equivalence + per-detector cells
+# ---------------------------------------------------------------------------
+
+def test_multi_detector_serial_thread_process_equivalent(
+        two_detector_serial):
+    serial = two_detector_serial
+    thread = run_campaign(TINY, workers=2, executor="thread",
+                          detectors=("sloth", "thres"),
+                          cache=DeploymentCache())
+    process = run_campaign(TINY, workers=2, executor="process",
+                           detectors=("sloth", "thres"))
+    for other in (thread, process):
+        assert other.outcomes == serial.outcomes
+        assert other.metrics == serial.metrics
+        assert other.cells == serial.cells
+        assert other.detector_metrics == serial.detector_metrics
+        assert other.detector_cells == serial.detector_cells
+
+
+def test_per_detector_cells_cover_all_detectors(two_detector_serial):
+    res = two_detector_serial
+    assert res.detectors == ("sloth", "thres")
+    assert set(res.detector_metrics) == {"sloth", "thres"}
+    assert set(res.detector_cells) == {"sloth", "thres"}
+    # the primary detector's top-level view is the per-detector entry
+    assert res.metrics == res.detector_metrics["sloth"]
+    assert res.cells == res.detector_cells["sloth"]
+    # every cell is present for every detector, with the same trial counts
+    for name in res.detectors:
+        cells = res.detector_cells[name]
+        assert set(cells) == set(res.cells)
+        for c, m in cells.items():
+            assert m.n_scenarios == res.cells[c].n_scenarios
+    # reductions over outcomes reproduce the result's tables
+    assert by_detector(res.outcomes) == res.detector_metrics
+    assert detector_cells(res.outcomes) == res.detector_cells
+
+
+def test_outcomes_carry_all_detector_verdicts(two_detector_serial):
+    for o in two_detector_serial.outcomes:
+        assert [d.detector for d in o.detector_results] == ["sloth",
+                                                            "thres"]
+        assert o.result_for("thres").detector == "thres"
+        assert o.result_for(None) is o.detector_results[0]
+        with pytest.raises(KeyError, match="no verdict"):
+            o.result_for("adr")
+        # compression comes from SLOTH's recorder artifacts
+        assert o.compression_ratio > 1
+
+
+# ---------------------------------------------------------------------------
+# wall-time telemetry
+# ---------------------------------------------------------------------------
+
+def test_wall_time_telemetry(two_detector_serial):
+    res = two_detector_serial
+    for o in res.outcomes:
+        assert o.sim_wall_time > 0
+        assert all(d.wall_time > 0 for d in o.detector_results)
+    stats = wall_time_stats(res.outcomes)
+    assert set(stats) == {"simulate", "sloth", "thres"}
+    for w in stats.values():
+        assert 0 < w.mean <= w.p95 <= w.total
+        assert w.n == len(res.outcomes)
+    assert "wall time per scenario" in res.summary()
+
+
+def test_wall_time_excluded_from_equality():
+    a = DetectorOutcome("sloth", True, "core", 1, 1.0, True, 1, (1,),
+                        wall_time=0.5)
+    b = DetectorOutcome("sloth", True, "core", 1, 1.0, True, 1, (1,),
+                        wall_time=99.0)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# mesh-size-aware thresholds (the 12×12 'none' false-flag fix)
+# ---------------------------------------------------------------------------
+
+def test_effective_flags_scale_with_mesh():
+    cfg = SlothConfig()
+    # reference (4×4) and smaller meshes keep the calibrated defaults
+    assert cfg.effective_core_z(16) == cfg.core_z_flag
+    assert cfg.effective_core_z(4) == cfg.core_z_flag
+    assert cfg.effective_link_ratio(48) == cfg.link_ratio_flag
+    # larger meshes raise the flags monotonically
+    z = [cfg.effective_core_z(n) for n in (16, 36, 64, 144)]
+    r = [cfg.effective_link_ratio(n) for n in (48, 120, 224, 528)]
+    assert all(a < b for a, b in zip(z, z[1:]))
+    assert all(a < b for a, b in zip(r, r[1:]))
+    # opting out recovers fixed thresholds
+    fixed = SlothConfig(core_z_per_log=0.0, link_ratio_per_log=0.0)
+    assert fixed.effective_link_ratio(528) == fixed.link_ratio_flag
+
+
+def test_12x12_none_cell_does_not_false_flag():
+    """Regression (ROADMAP follow-up): at the default config the 12×12
+    'none' cell used to flag healthy links; the mesh-size-aware link flag
+    keeps the FPR at zero *while 10× failures stay detectable* — both
+    sides pinned, so neither a threshold drop (FPR creeps back) nor an
+    over-eager raise (real failures silenced) can slip through."""
+    g = CampaignGrid(workloads=("darknet19",), meshes=("12x12",),
+                     kinds=("core", "link", "none"), severities=(10.0,),
+                     reps=3, campaign_seed=4)
+    res = run_campaign(g, workers=0, cache=DeploymentCache())
+    m = res.metrics
+    assert m.fpr.trials == 3
+    assert m.fpr.successes == 0, (
+        f"12x12 'none' scenarios false-flagged: "
+        f"{[(o.pred_kind, o.pred_location, o.score) for o in res.outcomes if o.kind == 'none']}"
+    )
+    assert m.accuracy.trials == 6
+    assert m.accuracy.rate >= 4 / 6          # measured 5/6 at this seed
+    assert m.topk_rate(3) >= 5 / 6           # measured 6/6

@@ -74,13 +74,16 @@ def test_probe_plan_structure(sloth):
 
 
 def test_baselines_run(sloth):
+    from repro.core.detectors import get_detector
     profile = sloth.run(None, seed=12345)
     sim = sloth.run([FailSlow("core", 5, 1.0, 8.0)], seed=1)
     flags = {}
-    for cls in B.ALL_BASELINES:
-        det = cls(sloth.mesh, profile)
-        v = det.detect(sim)
-        flags[det.name] = (v.flagged, v.kind, v.location)
+    for name in B.BASELINE_NAMES:
+        det = get_detector(name)().prepare(sloth.graph, sloth.mesh, profile)
+        v = det.analyse(sim)
+        assert v.detector == name and v.mesh is sloth.mesh
+        assert bool(v.ranking) == v.flagged     # single-entry ranking
+        flags[name] = (v.flagged, v.kind, v.location)
     # the stronger baselines find the core failure
     assert flags["thres"][0] and flags["perseus"][0]
     assert flags["perseus"][1:] == ("core", 5)
