@@ -348,6 +348,78 @@ def bench_multi_failure(n_samples=None):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# severity sweeps: accuracy/FPR/recall vs slowdown near the detection
+# threshold
+# ---------------------------------------------------------------------------
+
+def bench_severity(reps=None):
+    """Near-threshold severity sweep (the grid's severity axis as a
+    first-class swept dimension): accuracy and recall@3 per injected
+    slowdown from 1.25× (barely degraded) through 3× (the transition
+    region) to the paper's 10×, via ``CampaignResult.severity_curve()``.
+    Detection should trend monotonically up across the threshold —
+    fail-slow severity grades the evidence, it doesn't gate it."""
+    reps = reps or (6 if FULL else 3)
+    cache = C.DeploymentCache()
+    cache.get("darknet19", 4, 4)
+    grid = C.CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                          kinds=("core", "link", "none"),
+                          severities=("linspace:1.25:3.0:8", 10.0),
+                          reps=reps, campaign_seed=9)
+    t0 = time.perf_counter()
+    res = C.run_campaign(grid, cache=cache, workers=1)
+    us = (time.perf_counter() - t0) / max(len(res.outcomes), 1) * 1e6
+    rows = []
+    curve = res.severity_curve()
+    for p in curve:
+        # repr round-trips the float, so sweep points arbitrarily close
+        # together never collapse onto one row name
+        tag = repr(p.severity)
+        rows.append((f"sevcurve_x{tag}_acc_pct", round(us, 1),
+                     round(p.accuracy.pct(), 2)))
+        rows.append((f"sevcurve_x{tag}_recall3_pct", 0.0,
+                     round(p.recall_at(3) * 100, 2)))
+    rows.append(("sevcurve_fpr_pct", 0.0, round(curve[0].fpr.pct(), 2)))
+    lo, hi = curve[0], curve[-1]
+    rows.append(("sevcurve_threshold_gain_pp", 0.0,
+                 round(hi.accuracy.pct() - lo.accuracy.pct(), 2)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# mixed-kind multi-failure campaigns: heterogeneous truth populations
+# ---------------------------------------------------------------------------
+
+def bench_mixed_kind(reps=None):
+    """Heterogeneous failure populations (the grid's ``kind='mixed'``
+    axis): k simultaneous failures whose kinds are sampled from the
+    core/link/router population, judged per truth kind
+    (``by_truth_kind``) across every registered detector."""
+    reps = reps or (8 if FULL else 4)
+    detectors = D.DEFAULT_DETECTORS
+    cache = C.DeploymentCache()
+    cache.get("darknet19", 4, 4, detectors=detectors)
+    grid = C.CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                          kinds=("mixed", "none"), severities=(10.0,),
+                          n_failures=(2,), reps=reps, campaign_seed=13)
+    t0 = time.perf_counter()
+    res = C.run_campaign(grid, detectors=detectors, cache=cache, workers=1)
+    us = (time.perf_counter() - t0) / max(len(res.outcomes), 1) * 1e6
+    rows = []
+    for name, m in res.detector_metrics.items():
+        rows.append((f"mixed_{name}_acc_anymatch_pct", round(us, 1),
+                     round(m.accuracy.pct(), 2)))
+        rows.append((f"mixed_{name}_recall3_pct", 0.0,
+                     round(m.recall_at(3) * 100, 2)))
+    for kind, tk in res.by_truth_kind().items():
+        rows.append((f"mixed_sloth_{kind}_recall3_pct", 0.0,
+                     round(tk.recall_at(3) * 100, 2)))
+        rows.append((f"mixed_sloth_{kind}_n", 0.0, tk.n_failures))
+    return rows
+
+
 ALL = [bench_impact, bench_accuracy, bench_probe_overhead, bench_storage,
        bench_sketch_params, bench_dse, bench_failrank_convergence,
-       bench_scalability, bench_multi_failure]
+       bench_scalability, bench_multi_failure, bench_severity,
+       bench_mixed_kind]

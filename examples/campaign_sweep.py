@@ -16,6 +16,16 @@ wall-time telemetry.
         --mesh 12x12 --mesh 16x8 --executor process             # big meshes
     PYTHONPATH=src python examples/campaign_sweep.py \\
         --detectors sloth --detectors thres --detectors adr     # Table III
+    PYTHONPATH=src python examples/campaign_sweep.py \\
+        --tiny --kinds mixed --kinds none --n-failures 2 \\
+        --severities linspace:1.5:3:4 --all-detectors   # mixed + sweep
+
+``--kinds`` accepts the base kinds, ``mixed`` (per-failure kinds sampled
+from the live core/link/router population) and ``core+link``-style
+composites; ``--severities`` accepts plain slowdown factors and
+``linspace:LO:HI:N`` sweep specs.  Campaigns with several severities
+print the ``severity_curve()`` readout; mixed-kind campaigns print the
+per-truth-kind recall split.
 """
 
 import argparse
@@ -32,17 +42,22 @@ from repro.core.detectors import (DEFAULT_DETECTORS,  # noqa: E402
 
 def make_grid(args) -> CampaignGrid:
     n_failures = tuple(args.n_failures) if args.n_failures else (1,)
+    kinds = (tuple(args.kinds) if args.kinds
+             else ("core", "link", "router", "none"))
     if args.tiny:
         return CampaignGrid(workloads=("darknet19",),
                             meshes=tuple(args.mesh) if args.mesh else (4,),
-                            kinds=("core", "link", "router", "none"),
-                            severities=(8.0,), n_failures=n_failures,
+                            kinds=kinds,
+                            severities=(tuple(args.severities)
+                                        if args.severities else (8.0,)),
+                            n_failures=n_failures,
                             reps=1, campaign_seed=args.seed)
     return CampaignGrid(
         workloads=("darknet19", "googlenet", "binary_tree"),
         meshes=tuple(args.mesh) if args.mesh else (4, 6),
-        kinds=("core", "link", "router", "none"),
-        severities=(5.0, 10.0),
+        kinds=kinds,
+        severities=(tuple(args.severities) if args.severities
+                    else (5.0, 10.0)),
         n_failures=n_failures,
         reps=2,
         campaign_seed=args.seed,
@@ -67,6 +82,14 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", action="append", default=None, metavar="WxH",
                     help="mesh axis entry, 'W' or 'WxH' "
                          "(repeatable, e.g. --mesh 12x12 --mesh 16x8)")
+    ap.add_argument("--kinds", action="append", default=None, metavar="K",
+                    help="failure-kind axis entry: core | link | router | "
+                         "none | mixed | 'core+link'-style composite "
+                         "(repeatable; default: all four base kinds)")
+    ap.add_argument("--severities", action="append", default=None,
+                    metavar="S", help="severity axis entry: a slowdown "
+                    "factor or 'linspace:LO:HI:N' sweep spec (repeatable, "
+                    "e.g. --severities 10 --severities linspace:1.5:3:4)")
     ap.add_argument("--detectors", action="append", default=None,
                     metavar="NAME", choices=available_detectors(),
                     help="detector to run on every scenario (repeatable; "
@@ -109,7 +132,7 @@ def main(argv=None) -> int:
                     f"({m.accuracy.successes}/{m.accuracy.trials}) "
                     f"top3 {m.topk_rate(3)*100:6.2f}% "
                     f"recall@3 {m.recall_at(3)*100:6.2f}%")
-        print(f"  {wl:12s} {w}x{h} {kind:6s} x{sev:<5.1f} k={nf} {stat}")
+        print(f"  {wl:12s} {w}x{h} {kind:9s} x{sev:<8.6g} k={nf} {stat}")
 
     if len(detectors) > 1:
         print(f"\n== per-detector (accuracy / FPR / top-3 / recall@3) ==")

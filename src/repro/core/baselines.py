@@ -12,11 +12,23 @@ All consume the same raw trace infrastructure (``SimResult``) as SLOTH for
 a fair comparison: ``prepare(graph, mesh, profile, cfg)`` fits each
 detector's nominal model against a healthy profiling run, and
 ``analyse(sim)`` returns the unified
-:class:`~repro.core.detectors.Verdict` — a single-entry ranking with the
-mesh attached, so ``Verdict.matches`` applies the shared router-aware
-judging rule (a baseline naming any link of a slowed router is correct)
-and the campaign's top-k / recall@k metrics treat baselines and SLOTH
-identically.  The old lossy ``BaselineVerdict`` 4-field verdict survives
+:class:`~repro.core.detectors.Verdict` with the mesh attached, so
+``Verdict.matches`` applies the shared router-aware judging rule (a
+baseline naming any link of a slowed router is correct) and the
+campaign's top-k / recall@k metrics treat baselines and SLOTH
+identically.
+
+Every baseline emits its **full ranked candidate list**: all resources
+whose statistic is above (or near) the detector's decision bar, in
+descending suspicion order, capped at ``max_ranked`` entries.  The top-1
+entry — and therefore accuracy/FPR — is unchanged from the historical
+single-entry behaviour; the tail is what makes baseline top-k / recall@k
+cells non-degenerate in multi-failure and mixed-kind campaigns (a
+single-entry ranking can never recall the second of two simultaneous
+failures).  Rankings are reported even below the flag threshold, exactly
+as SLOTH does, so near-threshold severity sweeps can measure graded
+localisation; ``flagged`` / ``kind`` / ``location`` keep their old
+semantics.  The old lossy ``BaselineVerdict`` 4-field verdict survives
 only as a deprecation shim.
 """
 
@@ -123,11 +135,24 @@ class _Baseline:
             setattr(self, attr, v)
         return self.analyse(sim)
 
+    #: cap on the emitted ranking length (suspicion-ordered prefix)
+    max_ranked = 16
+
     def _verdict(self, sim: SimResult, flagged: bool,
                  kind: str | None, location: int | None,
-                 score: float) -> Verdict:
-        ranking = ([(kind, int(location), float(score))]
-                   if flagged else [])
+                 score: float, ranking=None) -> Verdict:
+        """Build the unified verdict.  ``ranking`` is the full
+        suspicion-ordered candidate list (truncated to ``max_ranked``);
+        when omitted, the historical single-entry ranking is synthesised
+        from the top-1 fields.  When flagged, the top-1 fields must agree
+        with ``ranking[0]`` — the campaign judge scores accuracy on the
+        former and recall@k on the latter."""
+        if ranking is None:
+            ranking = ([(kind, int(location), float(score))]
+                       if flagged else [])
+        else:
+            ranking = [(k, int(l), float(v))
+                       for k, l, v in ranking[:self.max_ranked]]
         return Verdict(flagged=bool(flagged), kind=kind,
                        location=(int(location) if flagged else None),
                        score=float(score), ranking=ranking,
@@ -140,9 +165,16 @@ class _Baseline:
 # ---------------------------------------------------------------------------
 
 class Thres(_Baseline):
-    """Flags any component whose latency exceeds 2× the profiled nominal."""
+    """Flags any component whose latency exceeds 2× the profiled nominal.
+
+    The ranking lists *every* core and link whose observed slowdown is
+    above ``rank_floor`` (near the 2× statistic), worst first — with k
+    simultaneous failures each victim clears the bar independently, so
+    the ranking carries all of them, not just the global worst."""
 
     name = "thres"
+    flag_ratio = 2.0
+    rank_floor = 1.25          # include near-statistic resources
 
     def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
         cores, stages, rate, _ = _per_core_rates(profile)
@@ -157,24 +189,32 @@ class Thres(_Baseline):
 
     def analyse(self, sim: SimResult) -> Verdict:
         cores, stages, rate, _ = _per_core_rates(sim)
-        worst, where = 1.0, None
+        slow_by: dict[tuple[str, int], float] = {}
         for c, s, r in zip(cores, stages, rate):
             nom = self.nominal.get((int(c), int(s)))
             if not nom or r <= 0:
                 continue
+            key = ("core", int(c))
             slow = nom / r
-            if slow > worst:
-                worst, where = slow, ("core", int(c))
+            if slow > slow_by.get(key, 0.0):
+                slow_by[key] = slow
         for lid, lats in _per_link_latency(sim, self.mesh).items():
             nom = self.link_nominal.get(lid)
             if not nom:
                 continue
+            key = ("link", int(lid))
             slow = float(np.median(lats)) / nom
-            if slow > worst:
-                worst, where = slow, ("link", int(lid))
-        if worst >= 2.0 and where:
-            return self._verdict(sim, True, where[0], where[1], worst)
-        return self._verdict(sim, False, None, None, worst)
+            if slow > slow_by.get(key, 0.0):
+                slow_by[key] = slow
+        worst = max(slow_by.values(), default=1.0)
+        worst = max(worst, 1.0)
+        ranking = sorted(((k, l, v) for (k, l), v in slow_by.items()
+                          if v >= self.rank_floor),
+                         key=lambda x: (-x[2], x[0], x[1]))
+        if worst >= self.flag_ratio and ranking:
+            return self._verdict(sim, True, ranking[0][0], ranking[0][1],
+                                 worst, ranking)
+        return self._verdict(sim, False, None, None, worst, ranking)
 
 
 # ---------------------------------------------------------------------------
@@ -226,8 +266,15 @@ class Mscope(_Baseline):
                 probs = np.array([b * (1 + anomaly[s]) for s, b in opts])
                 probs /= probs.sum()
                 node = int(opts[rng.choice(len(opts), p=probs)][0])
+        # every visited core, most-visited first (argmax tie-break: lowest
+        # index), is a root-cause candidate — the walk mass spreads over
+        # all simultaneous anomaly sources
+        ranking = [("core", int(c), float(visits[c]))
+                   for c in sorted(np.nonzero(visits > 0)[0],
+                                   key=lambda c: (-visits[c], c))]
         loc = int(np.argmax(visits))
-        return self._verdict(sim, True, "core", loc, float(visits[loc]))
+        return self._verdict(sim, True, "core", loc, float(visits[loc]),
+                             ranking)
 
 
 # ---------------------------------------------------------------------------
@@ -280,16 +327,31 @@ class IASO(_Baseline):
             else:
                 score[c] *= 0.7          # multiplicative decrease
         labels = _dbscan_1d(score, eps=max(score.std(), 1e-9) * 0.5)
-        # outliers = cores not in the majority cluster with high score
+        # outliers = cores not in the majority cluster with high score;
+        # the ranking lists outlier candidates first (max-tuple tie-break:
+        # highest index), then every other core with AIMD mass, so all
+        # simultaneous timeout sources stay recallable
+        def _order(idxs):
+            return sorted(idxs, key=lambda i: (-score[i], -i))
+
         if len(np.unique(labels[labels >= 0])) == 0:
-            return self._verdict(sim, False, None, None, 0.0)
-        major = np.bincount(labels[labels >= 0]).argmax()
-        cand = [(score[i], i) for i in range(len(score))
-                if labels[i] != major and score[i] > score.mean() + 2]
-        if not cand:
-            return self._verdict(sim, False, None, None, float(score.max()))
-        sc, loc = max(cand)
-        return self._verdict(sim, True, "core", int(loc), float(sc))
+            cand = []              # every cluster dissolved into noise
+        else:
+            major = np.bincount(labels[labels >= 0]).argmax()
+            cand = [i for i in range(len(score))
+                    if labels[i] != major and score[i] > score.mean() + 2]
+        cand_set = set(cand)
+        ordered_cand = _order(cand)
+        rest = [i for i in range(len(score))
+                if score[i] > 0 and i not in cand_set]
+        ranking = [("core", int(i), float(score[i]))
+                   for i in ordered_cand + _order(rest)]
+        if not cand:               # unflagged still reports the AIMD mass
+            return self._verdict(sim, False, None, None,
+                                 float(score.max()), ranking)
+        loc = ordered_cand[0]
+        return self._verdict(sim, True, "core", int(loc),
+                             float(score[loc]), ranking)
 
 
 # ---------------------------------------------------------------------------
@@ -318,8 +380,15 @@ class Perseus(_Baseline):
             return self._verdict(sim, False, None, None,
                                  float(resid.max() - self.p999))
         counts = np.bincount(cores[out], minlength=self.mesh.n_cores)
+        # every core with p99.9 outlier instructions, most first (argmax
+        # tie-break: lowest index) — simultaneous failures each contribute
+        # their own outlier population
+        ranking = [("core", int(c), float(counts[c]))
+                   for c in sorted(np.nonzero(counts > 0)[0],
+                                   key=lambda c: (-counts[c], c))]
         loc = int(np.argmax(counts))
-        return self._verdict(sim, True, "core", loc, float(counts[loc]))
+        return self._verdict(sim, True, "core", loc, float(counts[loc]),
+                             ranking)
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +398,8 @@ class Perseus(_Baseline):
 class ADR(_Baseline):
     name = "adr"
     n_windows = 8
+    flag_ratio = 1.5
+    rank_floor = 1.1           # include near-threshold window drops
 
     def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
         pass                     # purely self-referential, no nominal model
@@ -340,7 +411,7 @@ class ADR(_Baseline):
         total = max(sim.total_time, 1e-9)
         win = np.clip((t_mid / total * n_windows).astype(int), 0,
                       n_windows - 1)
-        worst, where = 0.0, None
+        per_core: dict[int, float] = {}    # worst window drop per core
         for c in range(self.mesh.n_cores):
             sel = cores == c
             if sel.sum() < 2 * n_windows:
@@ -357,12 +428,21 @@ class ADR(_Baseline):
                     thr = np.quantile(hist, 0.1)   # adaptive threshold
                     if cur < thr:
                         slow = thr / max(cur, 1e-12)
-                        if slow > worst:
-                            worst, where = slow, c
+                        if slow > per_core.get(c, 0.0):
+                            per_core[c] = slow
                 hist.append(cur)
-        if where is not None and worst > 1.5:
-            return self._verdict(sim, True, "core", int(where), worst)
-        return self._verdict(sim, False, None, None, worst)
+        worst = max(per_core.values(), default=0.0)
+        # every core whose own windows dropped below its adaptive
+        # threshold, worst first (ties: lowest core id) — one entry per
+        # simultaneously degraded core
+        ranking = [("core", int(c), float(s))
+                   for c, s in sorted(per_core.items(),
+                                      key=lambda x: (-x[1], x[0]))
+                   if s >= self.rank_floor]
+        if worst > self.flag_ratio and ranking:
+            return self._verdict(sim, True, "core", ranking[0][1], worst,
+                                 ranking)
+        return self._verdict(sim, False, None, None, worst, ranking)
 
 
 ALL_BASELINES = [Thres, Mscope, IASO, Perseus, ADR]

@@ -16,23 +16,57 @@ A :class:`CampaignGrid` is the cross product
 
     workload × mesh × failure kind × severity × n_failures × replicate
 
-with ``kind ∈ {'core', 'link', 'router', 'none'}``.  Mesh entries may be a
-square width ``W``, a ``(W, H)`` pair or a ``'WxH'`` string — they are
-normalised to ``(W, H)`` tuples at grid construction, so rectangular meshes
-(``12×8``, ``16×8``, …) flow through scenario keys, cache keys and metric
-cells unchanged.  ``n_failures`` entries are k ≥ 1 *simultaneous* failures
-of the scenario's kind at k distinct locations (ground truth becomes a set;
-see ``metrics.py`` for any-match accuracy and per-failure recall@k).
-``'none'`` cells are negative (failure-free) samples and collapse both the
-severity and n_failures axes — they are enumerated once per replicate with
-``severity = 0.0`` and ``n_failures = 0``.
+with ``kind ∈ {'core', 'link', 'router', 'none', 'mixed'}`` or an explicit
+per-failure kind tuple.  Mesh entries may be a square width ``W``, a
+``(W, H)`` pair or a ``'WxH'`` string — they are normalised to ``(W, H)``
+tuples at grid construction, so rectangular meshes (``12×8``, ``16×8``, …)
+flow through scenario keys, cache keys and metric cells unchanged.
+``n_failures`` entries are k ≥ 1 *simultaneous* failures at k distinct
+locations (ground truth becomes a set; see ``metrics.py`` for any-match
+accuracy and per-failure recall@k).
+
+Heterogeneous (mixed-kind) scenarios come in two grid spellings:
+
+* ``kind='mixed'`` — each of the scenario's k failures samples its own
+  kind by drawing without replacement from the *union population* of the
+  deployment's resources (every core, every used link, every used router),
+  so a failure's kind probability is proportional to that kind's live
+  resource count — the heterogeneous-fleet model of the paper's §IV-A
+  7:3 core:link populations, extended to routers.
+* an explicit kind tuple of **two or more** components, e.g.
+  ``('core', 'link')`` (equivalently the string ``'core+link'``) —
+  exactly those kinds, one failure each, at distinct locations per kind.
+  A tuple entry pins the scenario's failure count to its length, so it
+  collapses the ``n_failures`` axis the same way ``'none'`` collapses
+  severity.  A single-kind tuple is rejected as ambiguous: spell it as
+  the plain kind (swept by the axis) or pin via ``n_failures=(1,)``.
+
+``metrics.by_truth_kind`` then splits per-failure recall@k and ranks by
+each *truth's* kind, so mixed campaigns report per-kind localisation
+quality inside heterogeneous scenarios.  ``'none'`` cells are negative
+(failure-free) samples and collapse both the severity and n_failures axes
+— they are enumerated once per replicate with ``severity = 0.0`` and
+``n_failures = 0``.
+
+Severity is a first-class swept axis: ``severities`` entries may be plain
+floats, a ``'linspace:LO:HI:N'`` string or a ``('linspace', lo, hi, n)``
+tuple — linspace specs expand (via ``np.linspace``) at grid construction,
+which makes near-detection-threshold sweeps one-line grid edits.
+``CampaignResult.severity_curve()`` returns the per-severity
+accuracy / FPR / recall@k readout with Wilson CIs.
 
 Every scenario is fully determined by ``(campaign_seed, workload, mesh,
 kind, severity, n_failures, rep)``: locations, onset times, durations and
 the simulator seed are drawn from a private ``numpy`` generator keyed on
 exactly that tuple (``np.random.default_rng([...])``), so there is **no
 global RNG state** and the same grid always materialises bit-identical
-scenarios, regardless of worker count, executor or execution order.
+scenarios, regardless of worker count, executor or execution order.  The
+severity enters the key through its IEEE-754 bit pattern
+(``np.float64(severity).view(np.uint64)``), so severities arbitrarily
+close together — exactly the near-threshold sweep case — still key
+distinct streams (keying on ``int(severity * 1000)`` used to collide
+severities closer than 1e-3 into identical location/onset/duration
+draws).
 
 Link/router placements are restricted to resources the healthy run actually
 exercises (the paper: "failures occurring on unused resources are
@@ -101,21 +135,68 @@ from .detectors import (DEFAULT_DETECTORS, Detector, get_detector,
 from .failures import FailSlow, judge_verdict, truth_candidates
 from .graph import build_workload
 from .metrics import (CampaignMetrics, DetectorOutcome, ScenarioOutcome,
-                      aggregate, by_detector, deployment_overheads,
-                      detector_cells, wall_time_stats)
+                      SeverityPoint, TruthKindMetrics, aggregate,
+                      by_detector, by_truth_kind, deployment_overheads,
+                      detector_cells, severity_curve, wall_time_stats)
 from .routing import Mesh2D
 from .simulator import SimResult, simulate
 from .sloth import Sloth, SlothConfig, SlothDetector
 
 __all__ = [
-    "KINDS", "EXECUTORS", "DEFAULT_DETECTORS", "CampaignGrid", "Scenario",
-    "Deployment", "DeploymentCache", "CampaignResult",
-    "enumerate_scenarios", "materialise", "run_scenario", "run_campaign",
-    "truth_candidates",
+    "KINDS", "MIXED", "FAILURE_KINDS", "EXECUTORS", "DEFAULT_DETECTORS",
+    "CampaignGrid", "Scenario", "Deployment", "DeploymentCache",
+    "CampaignResult", "enumerate_scenarios", "materialise", "run_scenario",
+    "run_campaign", "truth_candidates",
 ]
 
 KINDS = ("core", "link", "router", "none")
+MIXED = "mixed"
 EXECUTORS = ("thread", "process")
+
+#: Kinds a concrete failure may take (everything except 'none').
+FAILURE_KINDS = ("core", "link", "router")
+
+
+def _normalise_kind(kind) -> str:
+    """Normalise a grid kind entry to its canonical string form.
+
+    Accepts the four base kinds, ``'mixed'``, an explicit kind tuple
+    (``('core', 'link')``) or its ``'core+link'`` string spelling.
+    Composite entries are canonicalised into ``FAILURE_KINDS`` order, so
+    ``('link', 'core')`` and ``'core+link'`` name the same scenario cell
+    (and the same RNG stream).
+    """
+    if isinstance(kind, (tuple, list)):
+        parts = tuple(str(k).lower() for k in kind)
+    elif isinstance(kind, str) and "+" in kind:
+        parts = tuple(p.strip().lower() for p in kind.split("+"))
+    else:
+        k = str(kind).lower()
+        if k not in KINDS and k != MIXED:
+            raise ValueError(
+                f"unknown failure kind {kind!r}; use one of "
+                f"{KINDS + (MIXED,)}, a 'core+link' composite or a kind "
+                f"tuple")
+        return k
+    bad = [p for p in parts if p not in FAILURE_KINDS]
+    if bad or not parts:
+        raise ValueError(
+            f"bad composite kind {kind!r}: components must be drawn from "
+            f"{FAILURE_KINDS}")
+    if len(parts) == 1:
+        # a 1-tuple cannot be distinguished from the plain kind once
+        # normalised, so it could not honour the pin-to-length contract —
+        # demand the unambiguous spelling instead
+        raise ValueError(
+            f"single-kind tuple {kind!r} is ambiguous: spell it as the "
+            f"plain kind {parts[0]!r} (swept by the n_failures axis) or "
+            f"pin one failure with n_failures=(1,)")
+    return "+".join(sorted(parts, key=FAILURE_KINDS.index))
+
+
+def _kind_parts(kind: str) -> tuple[str, ...]:
+    """Per-failure kinds pinned by a composite entry ('' for the rest)."""
+    return tuple(kind.split("+")) if "+" in kind else ()
 
 
 def _mesh_dims(mesh) -> tuple[int, int]:
@@ -143,9 +224,62 @@ def _mesh_dims(mesh) -> tuple[int, int]:
     return w, h
 
 
+def _expand_severities(entries) -> tuple[float, ...]:
+    """Expand a severities spec to a flat float tuple.
+
+    Entries may be plain numbers, ``'linspace:LO:HI:N'`` strings or
+    ``('linspace', lo, hi, n)`` tuples; linspace specs expand via
+    ``np.linspace`` so near-threshold sweeps are declared, not typed out.
+    Exact duplicates (e.g. a plain entry also covered by a linspace) are
+    dropped, keeping first occurrence: duplicate severity cells would
+    share one RNG stream and double-count bit-identical outcomes in
+    every metric.
+    """
+    if isinstance(entries, (str, int, float)):
+        entries = (entries,)
+    elif isinstance(entries, (tuple, list)) and entries \
+            and entries[0] == "linspace":
+        entries = (tuple(entries),)    # a bare spec, not a list of specs
+    out: list[float] = []
+    for e in entries:
+        spec = None
+        if isinstance(e, str) and e.startswith("linspace"):
+            spec = e.split(":")[1:]
+        elif isinstance(e, (tuple, list)):
+            # any tuple/list entry must be a linspace spec — falling
+            # through to float(e) would raise an unhelpful TypeError
+            if not e or e[0] != "linspace":
+                raise ValueError(
+                    f"bad severity spec {e!r}: tuple entries must be "
+                    f"('linspace', lo, hi, n)")
+            spec = list(e[1:])
+        if spec is not None:
+            try:
+                lo, hi, n = float(spec[0]), float(spec[1]), int(spec[2])
+            except (IndexError, ValueError):
+                raise ValueError(
+                    f"bad severity spec {e!r}: use 'linspace:LO:HI:N' or "
+                    f"('linspace', lo, hi, n)") from None
+            if n < 1:
+                raise ValueError(f"bad severity spec {e!r}: N must be >= 1")
+            out.extend(float(x) for x in np.linspace(lo, hi, n))
+        else:
+            out.append(float(e))
+    for s in out:
+        if not s > 0.0:
+            raise ValueError(
+                f"severities must be positive slowdown factors, got {s}")
+    return tuple(dict.fromkeys(out))
+
+
 def _normalise_detectors(detectors, baselines) -> tuple[str, ...]:
     """Resolve the ``detectors=`` request (plus the deprecated
     ``baselines=`` flag) to a validated, deduplicated name tuple."""
+    if isinstance(detectors, bool):
+        # a legacy positional baselines flag landing on the detectors
+        # parameter (pre-unified-API call sites) — honour the shim
+        # instead of failing with "'bool' object is not iterable"
+        detectors, baselines = ("sloth",), detectors
     if baselines is not None:
         warnings.warn(
             "baselines= is deprecated; pass detectors=('sloth', 'thres', "
@@ -181,22 +315,38 @@ class CampaignGrid:
     min_dur_frac: float = 0.4                # duration ⊆ healthy runtime
 
     def __post_init__(self):
-        bad = set(self.kinds) - set(KINDS)
-        if bad:
-            raise ValueError(f"unknown failure kinds: {sorted(bad)}")
+        # dedupe after normalisation: alias spellings ('core+link' vs
+        # ('link', 'core')) would otherwise enumerate bit-identical
+        # scenarios twice on one RNG stream, double-counting every metric
+        kinds = tuple(dict.fromkeys(_normalise_kind(k)
+                                    for k in self.kinds))
+        object.__setattr__(self, "kinds", kinds)
         if self.reps < 1:
             raise ValueError("reps must be >= 1")
         if not self.n_failures or any(int(k) < 1 for k in self.n_failures):
             raise ValueError("n_failures entries must be >= 1")
         object.__setattr__(self, "meshes",
                            tuple(_mesh_dims(m) for m in self.meshes))
+        object.__setattr__(self, "severities",
+                           _expand_severities(self.severities))
         object.__setattr__(self, "n_failures",
                            tuple(int(k) for k in self.n_failures))
 
+    def _axes_for_kind(self, kind: str) \
+            -> tuple[tuple[float, ...], tuple[int, ...]]:
+        """(severities, n_failures) swept for one kind entry: 'none'
+        collapses both axes, a composite kind pins n_failures to its
+        component count."""
+        if kind == "none":
+            return (0.0,), (0,)
+        parts = _kind_parts(kind)
+        if parts:
+            return self.severities, (len(parts),)
+        return self.severities, self.n_failures
+
     def n_scenarios(self) -> int:
-        per_deploy = sum(self.reps * (len(self.severities)
-                                      * len(self.n_failures)
-                                      if k != "none" else 1)
+        per_deploy = sum(self.reps * len(self._axes_for_kind(k)[0])
+                         * len(self._axes_for_kind(k)[1])
                          for k in self.kinds)
         return len(self.workloads) * len(self.meshes) * per_deploy
 
@@ -222,8 +372,7 @@ def enumerate_scenarios(grid: CampaignGrid) -> list[Scenario]:
     for wl in grid.workloads:
         for w, h in grid.meshes:
             for kind in grid.kinds:
-                sevs = (0.0,) if kind == "none" else grid.severities
-                nfs = (0,) if kind == "none" else grid.n_failures
+                sevs, nfs = grid._axes_for_kind(kind)
                 for sev in sevs:
                     for nf in nfs:
                         for rep in range(grid.reps):
@@ -232,13 +381,41 @@ def enumerate_scenarios(grid: CampaignGrid) -> list[Scenario]:
     return out
 
 
+def _kind_key(kind: str) -> int:
+    """Stable integer key for a kind: the four base kinds keep their
+    historical ``KINDS`` index (so pre-mixed grids reproduce their draws);
+    'mixed' and composite kinds fold their **entire** name into the key
+    (SeedSequence takes arbitrary-precision entropy) — a truncated prefix
+    would collide long composites like 'core+link+link' vs
+    'core+link+router' back onto one RNG stream."""
+    try:
+        return KINDS.index(kind)
+    except ValueError:
+        return int.from_bytes(kind.encode().ljust(8, b"\0"), "big")
+
+
+def _severity_key(severity: float) -> int:
+    """The severity's IEEE-754 bit pattern.  Keying on the float's bits
+    (not on ``int(severity * 1000)``) keeps severities closer than 1e-3 —
+    the near-threshold sweep case — on distinct RNG streams.  The bit
+    pattern differs from the old key for every nonzero severity, so all
+    positive-scenario draws re-keyed at this fix (0.0 still keys to 0;
+    'none' draws re-keyed only via the full-name workload fold in
+    ``_scenario_rng``, for workload names longer than 8 bytes) — pre-fix
+    campaign recordings are not comparable."""
+    return int(np.float64(severity).view(np.uint64))
+
+
 def _scenario_rng(grid: CampaignGrid, s: Scenario) -> np.random.Generator:
     """Private per-scenario stream: keyed on the scenario coordinates, not
-    on enumeration order, so sub-grids reproduce the full grid's draws."""
-    wl_key = int.from_bytes(s.workload.encode()[:8].ljust(8, b"\0"), "big")
+    on enumeration order, so sub-grids reproduce the full grid's draws.
+    The workload key folds the **entire** name (an 8-byte-prefix fold
+    would collide e.g. 'resnet50_v1'/'resnet50_v2' onto one stream — the
+    same truncation class the severity/kind keys guard against)."""
+    wl_key = int.from_bytes(s.workload.encode().ljust(8, b"\0"), "big")
     return np.random.default_rng(
         [grid.campaign_seed, wl_key, s.mesh_w, s.mesh_h,
-         KINDS.index(s.kind), int(s.severity * 1000), s.n_failures, s.rep])
+         _kind_key(s.kind), _severity_key(s.severity), s.n_failures, s.rep])
 
 
 # ---------------------------------------------------------------------------
@@ -349,47 +526,105 @@ _WORKER_CACHE = DeploymentCache()
 # materialisation + single-scenario execution
 # ---------------------------------------------------------------------------
 
-def materialise(grid: CampaignGrid, s: Scenario, dep: Deployment) \
-        -> tuple[tuple[FailSlow, ...], int]:
-    """Derive (failures, sim_seed) for one scenario — deterministic in the
-    scenario coordinates and the deployment's healthy run.  ``'none'``
-    scenarios yield an empty failure tuple; positive scenarios yield
-    ``s.n_failures`` simultaneous failures of ``s.kind`` at distinct
-    locations, each with its own onset and duration."""
-    rng = _scenario_rng(grid, s)
-    sim_seed = int(rng.integers(1 << 31))
-    if s.kind == "none":
-        return (), sim_seed
+def _kind_pools(dep: Deployment) -> dict[str, tuple[int, ...]]:
+    """Placement pools per failure kind: every core, plus the links and
+    routers the healthy run actually exercises (the paper: "failures
+    occurring on unused resources are excluded")."""
+    return {"core": tuple(range(dep.sloth.mesh.n_cores)),
+            "link": dep.used_links, "router": dep.used_routers}
+
+
+def _draw_sites(rng: np.random.Generator, s: Scenario,
+                dep: Deployment) -> list[tuple[str, int]]:
+    """Draw ``s.n_failures`` distinct (kind, location) failure sites.
+
+    Homogeneous kinds reproduce the historical draw sequence exactly.
+    ``'mixed'`` samples without replacement from the union population of
+    all placeable resources (kind probability ∝ live resource count);
+    composite kinds (``'core+link'``) draw one failure per pinned kind,
+    distinct within each kind's pool.
+    """
     mesh = dep.sloth.mesh
     k = s.n_failures
+    parts = _kind_parts(s.kind)
+    if s.kind == MIXED:
+        pools = _kind_pools(dep)
+        union = [(kind, int(loc)) for kind in FAILURE_KINDS
+                 for loc in pools[kind]]
+        if k > len(union):
+            raise ValueError(
+                f"cannot place {k} distinct mixed-kind failures: only "
+                f"{len(union)} placeable resources on {s.workload}@"
+                f"{s.mesh_w}x{s.mesh_h}")
+        return [union[int(i)]
+                for i in rng.choice(len(union), size=k, replace=False)]
+    if parts:
+        pools = _kind_pools(dep)
+        sites: list[tuple[str, int]] = []
+        for kind in FAILURE_KINDS:
+            count = parts.count(kind)
+            if not count:
+                continue
+            pool = pools[kind]
+            if not pool:
+                raise ValueError(
+                    f"no used {kind}s on {s.workload}@"
+                    f"{s.mesh_w}x{s.mesh_h}: the healthy run has no "
+                    f"cross-core traffic, so a {kind} fail-slow cannot "
+                    f"affect execution — drop {s.kind!r} from the grid")
+            if count > len(pool):
+                raise ValueError(
+                    f"cannot place {count} distinct {kind} failures: only "
+                    f"{len(pool)} used {kind}s on {s.workload}@"
+                    f"{s.mesh_w}x{s.mesh_h}")
+            sites += [(kind, int(pool[int(i)]))
+                      for i in rng.choice(len(pool), size=count,
+                                          replace=False)]
+        return sites
     if s.kind == "core":
         if k > mesh.n_cores:
             raise ValueError(
                 f"cannot place {k} distinct core failures on a "
                 f"{mesh.n_cores}-core {s.mesh_w}x{s.mesh_h} mesh")
-        locs = [int(c) for c in rng.choice(mesh.n_cores, size=k,
-                                           replace=False)]
-    else:            # link/router — only resources carrying traffic
-        pool = dep.used_links if s.kind == "link" else dep.used_routers
-        if not pool:
-            raise ValueError(
-                f"no used {s.kind}s on {s.workload}@"
-                f"{s.mesh_w}x{s.mesh_h}: the healthy run has no "
-                f"cross-core traffic, so a {s.kind} fail-slow cannot "
-                f"affect execution — drop this kind from the grid")
-        if k > len(pool):
-            raise ValueError(
-                f"cannot place {k} distinct {s.kind} failures: only "
-                f"{len(pool)} used {s.kind}s on {s.workload}@"
-                f"{s.mesh_w}x{s.mesh_h}")
-        locs = [int(pool[int(i)]) for i in rng.choice(len(pool), size=k,
-                                                      replace=False)]
+        return [("core", int(c)) for c in rng.choice(mesh.n_cores, size=k,
+                                                     replace=False)]
+    # link/router — only resources carrying traffic
+    pool = dep.used_links if s.kind == "link" else dep.used_routers
+    if not pool:
+        raise ValueError(
+            f"no used {s.kind}s on {s.workload}@"
+            f"{s.mesh_w}x{s.mesh_h}: the healthy run has no "
+            f"cross-core traffic, so a {s.kind} fail-slow cannot "
+            f"affect execution — drop this kind from the grid")
+    if k > len(pool):
+        raise ValueError(
+            f"cannot place {k} distinct {s.kind} failures: only "
+            f"{len(pool)} used {s.kind}s on {s.workload}@"
+            f"{s.mesh_w}x{s.mesh_h}")
+    return [(s.kind, int(pool[int(i)]))
+            for i in rng.choice(len(pool), size=k, replace=False)]
+
+
+def materialise(grid: CampaignGrid, s: Scenario, dep: Deployment) \
+        -> tuple[tuple[FailSlow, ...], int]:
+    """Derive (failures, sim_seed) for one scenario — deterministic in the
+    scenario coordinates and the deployment's healthy run.  ``'none'``
+    scenarios yield an empty failure tuple; positive scenarios yield
+    ``s.n_failures`` simultaneous failures at distinct (kind, location)
+    sites — all of ``s.kind`` for homogeneous scenarios, independently
+    sampled kinds for ``'mixed'`` and per-component kinds for composite
+    entries — each with its own onset and duration."""
+    rng = _scenario_rng(grid, s)
+    sim_seed = int(rng.integers(1 << 31))
+    if s.kind == "none":
+        return (), sim_seed
+    sites = _draw_sites(rng, s, dep)
     total = dep.healthy.total_time
     failures = []
-    for loc in locs:
+    for kind, loc in sites:
         t0 = float(rng.uniform(0.0, grid.max_t0_frac * total))
         dur = float(rng.uniform(grid.min_dur_frac, 1.0) * total)
-        failures.append(FailSlow(s.kind, loc, t0, dur, s.severity))
+        failures.append(FailSlow(kind, loc, t0, dur, s.severity))
     return tuple(failures), sim_seed
 
 
@@ -427,6 +662,7 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
         truth_locations=tuple(f.location for f in failures),
         truth_t0s=tuple(f.t0 for f in failures),
         truth_durations=tuple(f.duration for f in failures),
+        truth_kinds=tuple(f.kind for f in failures),
         detector_results=tuple(results),
         compression_ratio=compression,
         total_time=total_time,
@@ -460,6 +696,22 @@ class CampaignResult:
     detector_cells: dict[str, dict[tuple, CampaignMetrics]]
     probe_overheads: dict[tuple, float]    # (workload, w, h) → overhead
 
+    def severity_curve(self, detector: str | None = None,
+                       ks: tuple[int, ...] = (1, 3, 5)) \
+            -> tuple[SeverityPoint, ...]:
+        """Accuracy / FPR / recall@k per injected severity (ascending),
+        with Wilson CIs — the near-threshold sweep readout for one
+        detector (``None`` → primary)."""
+        return severity_curve(self.outcomes, ks=ks, detector=detector)
+
+    def by_truth_kind(self, detector: str | None = None,
+                      ks: tuple[int, ...] = (1, 3, 5)) \
+            -> dict[str, TruthKindMetrics]:
+        """Per-failure recall@k and ranks split by each truth's own kind
+        — the mixed-kind campaign readout for one detector (``None`` →
+        primary)."""
+        return by_truth_kind(self.outcomes, ks=ks, detector=detector)
+
     def summary(self) -> str:
         m = self.metrics
         lines = [
@@ -492,6 +744,23 @@ class CampaignResult:
                     f"{dm.fpr.pct():6.2f}% "
                     f"{dm.topk_rate(3)*100:6.2f}% "
                     f"{dm.recall_at(3)*100:6.2f}%")
+        if len({o.severity for o in self.outcomes if o.positive}) > 1:
+            lines.append("severity curve (accuracy / recall@3):")
+            for p in self.severity_curve():
+                lines.append(
+                    f"  x{p.severity:<8.6g} {p.accuracy.pct():6.2f}% "
+                    f"{p.recall_at(3)*100:6.2f}%  (n={p.n_scenarios})")
+        kinds = self.by_truth_kind()
+        if len(kinds) > 1:
+            lines.append("per truth kind (recall@1 / recall@3 / "
+                         "mean rank):")
+            for kind, tk in kinds.items():
+                rank = (f"{tk.mean_rank:5.2f}" if tk.mean_rank is not None
+                        else "  n/a")
+                lines.append(
+                    f"  {kind:8s} {tk.recall_at(1)*100:6.2f}% "
+                    f"{tk.recall_at(3)*100:6.2f}% {rank}  "
+                    f"(n={tk.n_failures})")
         wall = wall_time_stats(self.outcomes)
         if wall:
             lines.append("wall time per scenario (mean / p95):")

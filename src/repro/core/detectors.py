@@ -8,9 +8,11 @@ module is that contract:
   carries a ranked candidate list, the mesh it was judged on (so
   ``matches`` is router-aware via :func:`repro.core.failures
   .truth_candidates`) and, for detectors that produce them, the recorder /
-  FailRank / MCG artifacts.  Single-shot detectors return a one-entry
-  ranking; the campaign judge, top-k and recall@k metrics then apply
-  uniformly.
+  FailRank / MCG artifacts.  Every detector — SLOTH and the baselines
+  alike — emits a multi-entry suspicion-ordered ranking (all resources
+  above or near its decision statistic), so the campaign judge, top-k and
+  recall@k metrics apply uniformly and stay non-degenerate under
+  multi-failure and mixed-kind scenarios.
 * :class:`Detector` — the protocol: ``name``, ``prepare(graph, mesh,
   profile, cfg)`` (fit nominal models against a healthy profiling run,
   returns ``self``) and ``analyse(sim) → Verdict``.
@@ -55,11 +57,13 @@ DEFAULT_DETECTORS = ("sloth", "thres", "mscope", "iaso", "perseus", "adr")
 class Verdict:
     """The one verdict type shared by every detector.
 
-    ``ranking`` is the detector's ordered candidate list (single-entry for
-    one-shot baselines); ``flagged_resources`` lists every resource whose
-    evidence independently clears the detector's threshold (multi-failure
-    report).  ``recorder`` / ``failrank`` / ``mcg`` are populated by
-    detectors that produce those artifacts (SLOTH) and ``None`` otherwise.
+    ``ranking`` is the detector's ordered candidate list — multi-entry for
+    every built-in, including the baselines, which list all resources
+    above/near their statistic; ``flagged_resources`` lists every resource
+    whose evidence independently clears the detector's threshold
+    (multi-failure report).  ``recorder`` / ``failrank`` / ``mcg`` are
+    populated by detectors that produce those artifacts (SLOTH) and
+    ``None`` otherwise.
     """
     flagged: bool
     kind: str | None              # 'core' | 'link'

@@ -21,7 +21,15 @@ A scenario may carry **several simultaneous injected failures** (the grid's
 ``n_failures`` axis): ground truth is therefore a *tuple* of truths
 (``truth_locations`` / ``truth_t0s`` / ``truth_durations``, all empty for
 negatives), each with its own 1-based rank in the verdict's ranking
-(``truth_ranks``; ``None`` when unranked).  The aggregates are:
+(``truth_ranks``; ``None`` when unranked).  Failures within one scenario
+may be of **different kinds** (the grid's ``kind='mixed'`` / explicit
+kind-tuple entries): ``truth_kinds`` records each injected failure's kind
+index-aligned with the other truth tuples, and :func:`by_truth_kind`
+splits per-failure recall@k and rank statistics by that kind — so a mixed
+campaign reports how well each detector localises core vs link vs router
+root causes *within heterogeneous scenarios*.  :func:`severity_curve`
+slices positives by injected severity (accuracy / recall@k per severity,
+negatives' FPR alongside) for near-threshold sweeps.  The aggregates are:
 
 * **accuracy (any-match)** — fraction of *positive* scenarios whose top-1
   verdict names any of the injected root causes (router failures accept any
@@ -86,7 +94,9 @@ class ScenarioOutcome:
     workload: str
     mesh_w: int
     mesh_h: int
-    kind: str                  # 'core' | 'link' | 'router' | 'none'
+    # 'core' | 'link' | 'router' | 'none' | 'mixed' | 'core+link'-style
+    # composites (per-failure kinds are in truth_kinds)
+    kind: str
     severity: float            # injected slowdown (0.0 for 'none')
     n_failures: int            # simultaneous injected failures (0 = 'none')
     rep: int                   # replicate index within the grid cell
@@ -104,10 +114,23 @@ class ScenarioOutcome:
     total_time: float
     probe_overhead: float          # of the deployment that ran the scenario
     sim_wall_time: float = dataclasses.field(default=0.0, compare=False)
+    # per-failure kinds, index-aligned with truth_locations; empty both for
+    # negatives and for outcomes predating the mixed-kind axis (see
+    # ``effective_truth_kinds``)
+    truth_kinds: tuple[str, ...] = ()
 
     @property
     def positive(self) -> bool:
         return self.kind != "none"
+
+    @property
+    def effective_truth_kinds(self) -> tuple[str, ...]:
+        """Per-failure kinds with the single-kind fallback: outcomes from
+        homogeneous scenarios (or synthesised without ``truth_kinds``)
+        report every failure as the scenario's own kind."""
+        if self.truth_kinds:
+            return self.truth_kinds
+        return (self.kind,) * len(self.truth_locations)
 
     # -- primary-detector convenience views --------------------------------
     @property
@@ -213,6 +236,15 @@ def wilson_interval(k: int, n: int, z: float = 1.96) -> tuple[float, float]:
     return (max(0.0, centre - half), min(1.0, centre + half))
 
 
+def _rate_at(pairs: tuple[tuple[int, BinomialStat], ...], k: int) -> float:
+    """Look up the rate for ``k`` in a ``((k, stat), ...)`` table — the
+    one accessor behind every ``topk_rate``/``recall_at``."""
+    for kk, stat in pairs:
+        if kk == k:
+            return stat.rate
+    raise KeyError(k)
+
+
 @dataclasses.dataclass(frozen=True)
 class CampaignMetrics:
     """Aggregate metrics over a set of scenario outcomes, for one
@@ -227,16 +259,10 @@ class CampaignMetrics:
     mean_probe_overhead_unweighted: float   # plain mean over deployments
 
     def topk_rate(self, k: int) -> float:
-        for kk, stat in self.topk:
-            if kk == k:
-                return stat.rate
-        raise KeyError(k)
+        return _rate_at(self.topk, k)
 
     def recall_at(self, k: int) -> float:
-        for kk, stat in self.recall:
-            if kk == k:
-                return stat.rate
-        raise KeyError(k)
+        return _rate_at(self.recall, k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -366,6 +392,109 @@ def detector_cells(outcomes: list[ScenarioOutcome],
     every accuracy/FPR/top-k number of the paper's comparison tables."""
     return {name: by_cell(outcomes, ks=ks, detector=name)
             for name in detectors_in(outcomes)}
+
+
+@dataclasses.dataclass(frozen=True)
+class TruthKindMetrics:
+    """Per-failure statistics for the injected failures of one truth kind
+    (the ``by_truth_kind`` split of a mixed-kind campaign)."""
+    kind: str                  # 'core' | 'link' | 'router'
+    n_failures: int            # injected failures of this kind (trials)
+    ranked: BinomialStat       # fraction of them ranked at all
+    recall: tuple[tuple[int, BinomialStat], ...]   # per-failure recall@k
+    mean_rank: float | None    # mean 1-based rank over the ranked subset
+
+    def recall_at(self, k: int) -> float:
+        return _rate_at(self.recall, k)
+
+
+def by_truth_kind(outcomes: list[ScenarioOutcome],
+                  ks: tuple[int, ...] = (1, 3, 5),
+                  detector: str | None = None) \
+        -> dict[str, TruthKindMetrics]:
+    """Split per-failure recall@k and ranks by the *truth's* kind.
+
+    Every injected failure of every positive scenario is one trial,
+    bucketed by its own kind (``effective_truth_kinds``) — so a mixed-kind
+    scenario contributes to several buckets at once, and the table answers
+    "which root-cause kinds does this detector localise well inside
+    heterogeneous failure populations?".  Buckets appear in canonical
+    ('core', 'link', 'router') order first, then any others in
+    first-occurrence order.
+    """
+    ranks: dict[str, list[int | None]] = {}
+    for o in outcomes:
+        if not o.positive:
+            continue
+        r = o.result_for(detector).truth_ranks
+        for kind, rank in zip(o.effective_truth_kinds, r):
+            ranks.setdefault(kind, []).append(rank)
+    order = [k for k in ("core", "link", "router") if k in ranks]
+    order += [k for k in ranks if k not in order]
+    out: dict[str, TruthKindMetrics] = {}
+    for kind in order:
+        rs = ranks[kind]
+        ranked = [r for r in rs if r is not None]
+        out[kind] = TruthKindMetrics(
+            kind=kind,
+            n_failures=len(rs),
+            ranked=BinomialStat(len(ranked), len(rs)),
+            recall=tuple(
+                (k, BinomialStat(sum(r <= k for r in ranked), len(rs)))
+                for k in ks),
+            mean_rank=(sum(ranked) / len(ranked)) if ranked else None,
+        )
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SeverityPoint:
+    """One severity slice of a campaign: accuracy / recall over the
+    positive scenarios injected at exactly this severity.  ``fpr`` is the
+    campaign's negative-sample rate (negatives collapse the severity axis,
+    so the same reference stat is attached to every point)."""
+    severity: float
+    n_scenarios: int
+    accuracy: BinomialStat          # any-match over this slice's positives
+    fpr: BinomialStat               # campaign negatives (shared reference)
+    recall: tuple[tuple[int, BinomialStat], ...]
+
+    def recall_at(self, k: int) -> float:
+        return _rate_at(self.recall, k)
+
+
+def severity_curve(outcomes: list[ScenarioOutcome],
+                   ks: tuple[int, ...] = (1, 3, 5),
+                   detector: str | None = None) \
+        -> tuple[SeverityPoint, ...]:
+    """Accuracy / FPR / recall@k as a function of injected severity, in
+    ascending severity order — the near-threshold sweep readout.  Each
+    distinct positive severity becomes one :class:`SeverityPoint`; Wilson
+    intervals come with every stat, so sparse sweep points report honest
+    uncertainty."""
+    neg = [o for o in outcomes if not o.positive]
+    fpr = BinomialStat(sum(o.result_for(detector).flagged for o in neg),
+                       len(neg))
+    by_sev: dict[float, list[ScenarioOutcome]] = {}
+    for o in outcomes:
+        if o.positive:
+            by_sev.setdefault(float(o.severity), []).append(o)
+    points = []
+    for sev in sorted(by_sev):
+        outs = by_sev[sev]
+        acc = BinomialStat(
+            sum(o.result_for(detector).matched for o in outs), len(outs))
+        hits = {k: 0 for k in ks}
+        trials = 0
+        for o in outs:
+            for r in o.result_for(detector).truth_ranks:
+                trials += 1
+                for k in ks:
+                    hits[k] += int(r is not None and r <= k)
+        points.append(SeverityPoint(
+            severity=sev, n_scenarios=len(outs), accuracy=acc, fpr=fpr,
+            recall=tuple((k, BinomialStat(hits[k], trials)) for k in ks)))
+    return tuple(points)
 
 
 def wall_time_stats(outcomes: list[ScenarioOutcome]) \

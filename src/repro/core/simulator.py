@@ -10,7 +10,11 @@ This is the paper's evaluation platform (§IV-A): a discrete-event model of a
   hardware backpressure: a consumer cannot start until its inputs arrive, so
   one slow core/link stalls the dependent region of the chip,
 * fail-slow injection on cores, links or routers (a router slows all its
-  adjacent links), active during a [t0, t0+dur) window,
+  adjacent links), active during a [t0, t0+dur) window.  A single run may
+  carry failures of *different kinds at once* (mixed-kind scenarios):
+  core and link windows live in separate per-resource tables, so they
+  coexist independently, and overlapping windows on one resource compound
+  multiplicatively,
 * probe-cost accounting so SL-Compiler's instrumentation overhead (Fig 10)
   is measurable.
 
@@ -80,7 +84,7 @@ class SimResult:
 def calibrate(graph_total_flops: float, n_cores: int,
               target_time: float = 8.0) -> float:
     """Pick mu_c so the healthy run takes ≈target_time simulated seconds,
-    keeping U(0,10s) failure windows meaningful across workloads.  0.85 is
+    keeping U(1,10s) failure windows meaningful across workloads.  0.85 is
     the measured average core utilisation under the Gemini-like mapping
     (execution is compute-dominated; waits overlap with other tasks)."""
     return graph_total_flops / (0.85 * n_cores * target_time)

@@ -195,10 +195,13 @@ def test_baselines_return_unified_verdict(sloth):
         assert v.mesh is sloth.mesh
         assert v.recorder is None and v.failrank is None and v.mcg is None
         assert v.total_time == sim.total_time
+        # multi-entry suspicion-ordered ranking, led by the top-1 verdict
+        from repro.core.baselines import _Baseline
+        assert len(v.ranking) <= _Baseline.max_ranked
+        for k, l, s in v.ranking:
+            assert k in ("core", "link") and isinstance(l, int)
         if v.flagged:
-            assert v.ranking == [(v.kind, v.location, v.score)]
-        else:
-            assert v.ranking == []
+            assert v.ranking[0] == (v.kind, v.location, v.score)
 
 
 # ---------------------------------------------------------------------------

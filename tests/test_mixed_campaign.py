@@ -1,0 +1,557 @@
+"""Mixed-kind multi-failure campaigns and near-threshold severity sweeps:
+grid spellings ('mixed', explicit kind tuples, linspace severity specs),
+the severity-bit RNG keying regression, heterogeneous judging, per-truth-
+kind metric splits, multi-entry baseline rankings, the severity_curve()
+readout, make_dataset's router_ratio, and executor equivalence for the
+combined grid."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.campaign import (FAILURE_KINDS, CampaignGrid,
+                                 DeploymentCache, enumerate_scenarios,
+                                 materialise, run_campaign)
+from repro.core.detectors import Verdict, prepare_detector
+from repro.core.failures import FailSlow, judge_verdict, make_dataset
+from repro.core.graph import build_workload
+from repro.core.metrics import (DetectorOutcome, ScenarioOutcome,
+                                by_truth_kind, severity_curve)
+from repro.core.routing import Mesh2D
+from repro.core.simulator import simulate
+from repro.core.sloth import Sloth
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+MIXED_GRID = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                          kinds=("mixed", "core+link", "none"),
+                          severities=(2.0, 2.0001, 10.0),
+                          n_failures=(2,), reps=1, campaign_seed=41)
+
+
+@pytest.fixture(scope="module")
+def cache():
+    c = DeploymentCache()
+    c.get("darknet19", 4, 4)
+    return c
+
+
+@pytest.fixture(scope="module")
+def mixed_serial(cache):
+    return run_campaign(MIXED_GRID, workers=0, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# grid spellings: mixed / composite kinds, linspace severities
+# ---------------------------------------------------------------------------
+
+def test_kind_normalisation():
+    g = CampaignGrid(kinds=("mixed", ("link", "core"), "router+core",
+                            "none"))
+    assert g.kinds == ("mixed", "core+link", "core+router", "none")
+    with pytest.raises(ValueError, match="unknown failure kind"):
+        CampaignGrid(kinds=("gremlin",))
+    with pytest.raises(ValueError, match="composite"):
+        CampaignGrid(kinds=(("core", "none"),))
+    with pytest.raises(ValueError, match="composite"):
+        CampaignGrid(kinds=("core+gremlin",))
+    # a 1-tuple cannot honour the pin-to-length contract once normalised
+    # to the plain kind string — rejected with the unambiguous spellings
+    with pytest.raises(ValueError, match="ambiguous"):
+        CampaignGrid(kinds=(("core",),))
+
+
+def test_workload_key_folds_full_name():
+    """Regression: the workload RNG key used to fold only the first 8
+    name bytes, so workloads sharing an 8-byte prefix ('resnet50_v1' vs
+    'resnet50_v2') reused one scenario stream."""
+    from repro.core.campaign import Scenario, _scenario_rng
+    g = CampaignGrid(workloads=("resnet50_v1", "resnet50_v2"),
+                     kinds=("core",), severities=(8.0,))
+    s1 = Scenario(0, "resnet50_v1", 4, 4, "core", 8.0, 1, 0)
+    s2 = Scenario(1, "resnet50_v2", 4, 4, "core", 8.0, 1, 0)
+    draws1 = _scenario_rng(g, s1).integers(1 << 31, size=4)
+    draws2 = _scenario_rng(g, s2).integers(1 << 31, size=4)
+    assert list(draws1) != list(draws2)
+
+
+def test_long_composite_kinds_key_distinct_streams(cache):
+    """Regression: _kind_key used to fold only the first 8 name bytes, so
+    'core+link+link' and 'core+link+router' (same prefix, same pinned
+    n_failures=3) collided onto one RNG stream and drew correlated
+    failure sites."""
+    from repro.core.campaign import _kind_key
+    assert _kind_key("core+link+link") != _kind_key("core+link+router")
+    dep = cache.get("darknet19", 4, 4)
+    a = CampaignGrid(workloads=("darknet19",),
+                     kinds=(("core", "link", "link"),),
+                     severities=(8.0,), campaign_seed=0)
+    b = dataclasses.replace(a, kinds=(("core", "link", "router"),))
+    fa, seed_a = materialise(a, enumerate_scenarios(a)[0], dep)
+    fb, seed_b = materialise(b, enumerate_scenarios(b)[0], dep)
+    assert seed_a != seed_b
+    assert [(f.kind, f.location, f.t0) for f in fa] \
+        != [(f.kind, f.location, f.t0) for f in fb]
+
+
+def test_kind_alias_spellings_deduplicate():
+    """'core+link' and ('link', 'core') normalise to one entry — alias
+    duplicates would enumerate bit-identical scenarios twice on one RNG
+    stream and double-count every metric."""
+    g = CampaignGrid(kinds=("core+link", ("link", "core"), "mixed",
+                            "mixed"))
+    assert g.kinds == ("core+link", "mixed")
+
+
+def test_composite_kind_pins_n_failures():
+    g = CampaignGrid(workloads=("darknet19",),
+                     kinds=("mixed", ("core", "link", "link"), "none"),
+                     severities=(8.0,), n_failures=(1, 2), reps=2)
+    scen = enumerate_scenarios(g)
+    assert len(scen) == g.n_scenarios()
+    # mixed sweeps the n_failures axis (1 sev × 2 k), the 3-tuple pins
+    # k=3 (1 × 1), none collapses both axes (1)
+    assert len(scen) == (1 * 2 + 1 * 1 + 1) * 2
+    assert {s.n_failures for s in scen if s.kind == "core+link+link"} \
+        == {3}
+    assert {s.n_failures for s in scen if s.kind == "mixed"} == {1, 2}
+
+
+def test_severity_linspace_specs():
+    g = CampaignGrid(severities=(1.5, "linspace:2:3:3",
+                                 ("linspace", 8.0, 10.0, 2)))
+    assert g.severities == (1.5, 2.0, 2.5, 3.0, 8.0, 10.0)
+    # exact duplicates collapse (first occurrence wins): duplicate cells
+    # would share one RNG stream and double-count identical outcomes
+    dup = CampaignGrid(severities=("linspace:1:3:3", 2.0, 1.0))
+    assert dup.severities == (1.0, 2.0, 3.0)
+    # a bare spec passed as the whole severities value works too
+    bare = CampaignGrid(severities=("linspace", 2.0, 3.0, 3))
+    assert bare.severities == (2.0, 2.5, 3.0)
+    with pytest.raises(ValueError, match="severity spec"):
+        CampaignGrid(severities=("linspace:1:2",))
+    with pytest.raises(ValueError, match="severity spec"):
+        CampaignGrid(severities=("linspace:1:2:0",))
+    # malformed tuple specs get the guidance too, not a raw TypeError
+    with pytest.raises(ValueError, match="severity spec"):
+        CampaignGrid(severities=(("linspace", 1.0, 3.0),))
+    with pytest.raises(ValueError, match="severity spec"):
+        CampaignGrid(severities=((1.0, 3.0),))
+    with pytest.raises(ValueError, match="positive"):
+        CampaignGrid(severities=(0.0,))
+
+
+def test_boolean_detectors_maps_to_baselines_shim(cache):
+    """A legacy positional baselines flag landing on the detectors
+    parameter follows the deprecation shim instead of crashing with
+    \"'bool' object is not iterable\"."""
+    with pytest.warns(DeprecationWarning, match="baselines"):
+        dep = cache.get("darknet19", 4, 4, None, True)
+    assert len(dep.detectors) == 6        # DEFAULT_DETECTORS prepared
+    with pytest.warns(DeprecationWarning, match="baselines"):
+        dep = cache.get("darknet19", 4, 4, None, False)
+    assert tuple(d.name for d in dep.detectors) == ("sloth",)
+
+
+# ---------------------------------------------------------------------------
+# RNG keying: the severity-collision bugfix
+# ---------------------------------------------------------------------------
+
+def test_near_threshold_severities_draw_distinct_sites(cache):
+    """Regression: scenario RNG used to key on int(severity * 1000), so
+    severities closer than 1e-3 collided into identical location/onset/
+    duration draws — exactly the near-threshold sweep case.  Keying on
+    the float's bit pattern separates severities 1e-4 apart while the
+    same severity stays bit-for-bit reproducible."""
+    dep = cache.get("darknet19", 4, 4)
+    base = CampaignGrid(workloads=("darknet19",), kinds=("core",),
+                        severities=(2.0,), n_failures=(2,),
+                        campaign_seed=0)
+    near = dataclasses.replace(base, severities=(2.0001,))
+    sa = enumerate_scenarios(base)[0]
+    sb = enumerate_scenarios(near)[0]
+    fa, seed_a = materialise(base, sa, dep)
+    fb, seed_b = materialise(near, sb, dep)
+    assert seed_a != seed_b
+    assert [f.location for f in fa] != [f.location for f in fb] \
+        or [f.t0 for f in fa] != [f.t0 for f in fb]
+    # identical severity reproduces identical draws
+    fa2, seed_a2 = materialise(base, sa, dep)
+    assert fa2 == fa and seed_a2 == seed_a
+
+
+def test_mixed_scenarios_in_grid_key_distinct_streams(mixed_serial):
+    """The three severities of the mixed grid (two of them 1e-4 apart)
+    materialise different failure sets."""
+    by_sev = {}
+    for o in mixed_serial.outcomes:
+        if o.kind == "mixed":
+            by_sev[o.severity] = (o.truth_kinds, o.truth_locations,
+                                  o.sim_seed)
+    assert len(by_sev) == 3
+    assert len({v for v in by_sev.values()}) == 3
+
+
+# ---------------------------------------------------------------------------
+# materialisation: heterogeneous sites
+# ---------------------------------------------------------------------------
+
+def test_mixed_materialise_distinct_heterogeneous_sites(cache):
+    dep = cache.get("darknet19", 4, 4)
+    g = dataclasses.replace(MIXED_GRID, kinds=("mixed",),
+                            n_failures=(4,), reps=3)
+    seen_kinds = set()
+    for s in enumerate_scenarios(g):
+        failures, _ = materialise(g, s, dep)
+        assert len(failures) == 4
+        sites = [(f.kind, f.location) for f in failures]
+        assert len(set(sites)) == len(sites)        # distinct sites
+        for f in failures:
+            assert f.kind in FAILURE_KINDS
+            assert f.slowdown == s.severity
+            if f.kind == "link":
+                assert f.location in dep.used_links
+            elif f.kind == "router":
+                assert f.location in dep.used_routers
+        seen_kinds.update(f.kind for f in failures)
+    # across the grid the union population surfaces >1 kind
+    assert len(seen_kinds) > 1
+
+
+def test_composite_materialise_one_failure_per_component(cache):
+    dep = cache.get("darknet19", 4, 4)
+    g = dataclasses.replace(MIXED_GRID, kinds=(("router", "core", "link"),))
+    for s in enumerate_scenarios(g):
+        failures, _ = materialise(g, s, dep)
+        assert sorted(f.kind for f in failures) == ["core", "link",
+                                                    "router"]
+
+
+def test_mixed_materialise_rejects_oversized_k(cache):
+    dep = cache.get("darknet19", 4, 4)
+    g = dataclasses.replace(MIXED_GRID, kinds=("mixed",),
+                            n_failures=(10_000,))
+    s = next(s for s in enumerate_scenarios(g) if s.kind == "mixed")
+    with pytest.raises(ValueError, match="cannot place"):
+        materialise(g, s, dep)
+
+
+def test_composite_materialise_rejects_unusable_component(cache):
+    dep = dataclasses.replace(cache.get("darknet19", 4, 4),
+                              used_links=(), used_routers=())
+    g = dataclasses.replace(MIXED_GRID, kinds=("core+link",))
+    s = enumerate_scenarios(g)[0]
+    with pytest.raises(ValueError, match="no used links"):
+        materialise(g, s, dep)
+
+
+# ---------------------------------------------------------------------------
+# judging: heterogeneous truth sets vs multi-entry rankings
+# ---------------------------------------------------------------------------
+
+def test_judge_verdict_mixed_truth_set():
+    """A core+link+router truth set judged against one multi-entry
+    ranking: per-kind ranks, any-match accuracy and the router-candidate
+    union all follow the shared rule."""
+    mesh = Mesh2D(4)
+    router = 5
+    rlink = mesh.links_of_router(router)[0]
+    truths = (FailSlow("core", 3, 0.0, 1.0, 8.0),
+              FailSlow("link", 20, 0.0, 1.0, 8.0),
+              FailSlow("router", router, 0.0, 1.0, 8.0))
+    v = Verdict(flagged=True, kind="link", location=rlink, score=3.0,
+                ranking=[("link", rlink, 3.0), ("core", 3, 2.0),
+                         ("link", 40, 1.5), ("link", 20, 1.2)],
+                mesh=mesh)
+    matched, best, ranks, union = judge_verdict(v, truths, mesh)
+    assert matched                       # top-1 names the router's link
+    assert ranks == (2, 4, 1) and best == 1
+    # the candidate union is router-aware: all of the slowed router's
+    # links are acceptable, plus the exact core and link truths
+    assert ("core", 3) in union and ("link", 20) in union
+    assert {("link", lid) for lid in mesh.links_of_router(router)} <= union
+    # dropping the router link from the ranking leaves core as best hit
+    v2 = dataclasses.replace(v, kind="core", location=3,
+                             ranking=[("core", 3, 2.0)])
+    matched2, best2, ranks2, _ = judge_verdict(v2, truths, mesh)
+    assert matched2 and best2 == 1 and ranks2 == (1, None, None)
+
+
+def test_campaign_outcomes_carry_truth_kinds(mixed_serial):
+    for o in mixed_serial.outcomes:
+        assert len(o.truth_kinds) == o.n_failures
+        assert o.truth_kinds == o.effective_truth_kinds
+        if o.kind == "core+link":
+            assert sorted(o.truth_kinds) == ["core", "link"]
+        elif o.kind == "none":
+            assert o.truth_kinds == ()
+
+
+def test_effective_truth_kinds_fallback():
+    det = DetectorOutcome(detector="sloth", flagged=True, pred_kind="core",
+                          pred_location=0, score=1.0, matched=True,
+                          truth_rank=1, truth_ranks=(1, 2))
+    o = ScenarioOutcome(
+        scenario_id=0, workload="wl", mesh_w=4, mesh_h=4, kind="core",
+        severity=8.0, n_failures=2, rep=0, sim_seed=0,
+        truth_locations=(1, 2), truth_t0s=(0.0, 0.0),
+        truth_durations=(1.0, 1.0), detector_results=(det,),
+        compression_ratio=1.0, total_time=1.0, probe_overhead=0.0)
+    assert o.truth_kinds == ()
+    assert o.effective_truth_kinds == ("core", "core")
+
+
+# ---------------------------------------------------------------------------
+# metrics: by_truth_kind + severity_curve semantics
+# ---------------------------------------------------------------------------
+
+def _outcome(i, kind, severity, truth_kinds, truth_ranks, matched,
+             flagged=True):
+    n = len(truth_kinds)
+    ranked = [r for r in truth_ranks if r is not None]
+    det = DetectorOutcome(
+        detector="sloth", flagged=flagged, pred_kind="core",
+        pred_location=0, score=1.0, matched=matched,
+        truth_rank=min(ranked) if ranked else None,
+        truth_ranks=tuple(truth_ranks))
+    return ScenarioOutcome(
+        scenario_id=i, workload="wl", mesh_w=4, mesh_h=4, kind=kind,
+        severity=severity, n_failures=n, rep=0, sim_seed=i,
+        truth_locations=tuple(range(n)), truth_t0s=(0.0,) * n,
+        truth_durations=(1.0,) * n, detector_results=(det,),
+        compression_ratio=1.0, total_time=1.0, probe_overhead=0.0,
+        truth_kinds=tuple(truth_kinds))
+
+
+def test_by_truth_kind_splits_per_failure_ranks():
+    outs = [
+        _outcome(0, "mixed", 8.0, ("core", "link"), (1, 4), True),
+        _outcome(1, "mixed", 8.0, ("link", "router"), (None, 2), True),
+        _outcome(2, "none", 0.0, (), (), True, flagged=False),
+    ]
+    tk = by_truth_kind(outs)
+    assert list(tk) == ["core", "link", "router"]    # canonical order
+    assert tk["core"].n_failures == 1
+    assert tk["link"].n_failures == 2
+    assert tk["link"].ranked.successes == 1          # one link unranked
+    assert tk["link"].recall_at(3) == 0.0
+    assert tk["link"].recall_at(5) == 0.5
+    assert tk["core"].mean_rank == 1.0
+    assert tk["router"].recall_at(3) == 1.0
+    # unranked-only bucket reports mean_rank None
+    only_miss = [_outcome(0, "mixed", 8.0, ("core",), (None,), False)]
+    assert by_truth_kind(only_miss)["core"].mean_rank is None
+
+
+def test_severity_curve_semantics():
+    outs = [
+        _outcome(0, "core", 1.5, ("core",), (None,), False),
+        _outcome(1, "core", 1.5, ("core",), (1,), True),
+        _outcome(2, "core", 10.0, ("core",), (1,), True),
+        _outcome(3, "core", 10.0, ("core",), (1,), True),
+        _outcome(4, "none", 0.0, (), (), True, flagged=False),
+        _outcome(5, "none", 0.0, (), (), True, flagged=True),
+    ]
+    curve = severity_curve(outs, ks=(1, 3))
+    assert [p.severity for p in curve] == [1.5, 10.0]   # ascending
+    lo, hi = curve
+    assert (lo.accuracy.successes, lo.accuracy.trials) == (1, 2)
+    assert (hi.accuracy.successes, hi.accuracy.trials) == (2, 2)
+    assert lo.recall_at(1) == 0.5 and hi.recall_at(1) == 1.0
+    # FPR is the campaign's negative rate, attached to every point
+    assert lo.fpr == hi.fpr
+    assert (lo.fpr.successes, lo.fpr.trials) == (1, 2)
+    # Wilson CIs ride along
+    assert 0.0 <= lo.accuracy.interval[0] <= lo.accuracy.rate
+
+
+def test_severity_curve_trends_monotone_across_threshold(cache):
+    """Acceptance: a near-threshold sweep shows accuracy trending up with
+    severity — barely-degraded 1.25× failures are hard, 3× failures land
+    above the detection statistic."""
+    g = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                     kinds=("core", "link", "none"),
+                     severities=(1.25, 3.0), reps=3, campaign_seed=9)
+    res = run_campaign(g, workers=0, cache=cache)
+    curve = res.severity_curve()
+    assert [p.severity for p in curve] == [1.25, 3.0]
+    lo, hi = curve
+    assert lo.accuracy.rate < hi.accuracy.rate
+    assert hi.accuracy.rate >= 0.75
+    assert lo.recall_at(3) <= hi.recall_at(3)
+    assert "severity curve" in res.summary()
+
+
+# ---------------------------------------------------------------------------
+# multi-entry baseline rankings
+# ---------------------------------------------------------------------------
+
+def test_baselines_emit_multi_entry_rankings():
+    """With two simultaneous strong failures the statistic-driven
+    baselines rank several resources — the single-entry degeneracy that
+    froze their top-k/recall@k cells is gone."""
+    sloth = Sloth(build_workload("darknet19"), Mesh2D(4))
+    profile = sloth.run(None, seed=12345)
+    sim = sloth.run([FailSlow("core", 5, 1.0, 8.0, 10.0),
+                     FailSlow("link", 20, 0.5, 7.0, 10.0)], seed=2)
+    entries = {}
+    for name in ("thres", "mscope", "perseus", "adr", "iaso"):
+        v = prepare_detector(name, sloth.graph, sloth.mesh,
+                             profile).analyse(sim)
+        entries[name] = v.ranking
+        if v.flagged:
+            assert v.ranking[0][:2] == (v.kind, v.location)
+        assert len(v.ranking) <= 16
+    assert len(entries["thres"]) >= 3
+    assert len(entries["mscope"]) >= 3
+    # thres sees both victims: the slowed core and the slowed link rank
+    ranked_sites = [(k, l) for k, l, _ in entries["thres"]]
+    assert ("core", 5) in ranked_sites and ("link", 20) in ranked_sites
+
+
+def test_iaso_all_noise_clustering_still_ranks(monkeypatch):
+    """Regression: when 1-D DBSCAN dissolves every cluster into noise,
+    IASO used to return an empty ranking — unlike its other unflagged
+    path — zeroing recall at exactly the near-threshold sweep points.
+    Unflagged verdicts now always report the AIMD score mass."""
+    import numpy as np
+
+    import repro.core.baselines as B
+    sloth = Sloth(build_workload("darknet19"), Mesh2D(4))
+    profile = sloth.run(None, seed=12345)
+    sim = sloth.run([FailSlow("core", 5, 0.5, 8.0, 10.0)], seed=2)
+    det = prepare_detector("iaso", sloth.graph, sloth.mesh, profile)
+    monkeypatch.setattr(B, "_dbscan_1d",
+                        lambda x, eps, min_pts=3: np.full(len(x), -1))
+    v = det.analyse(sim)
+    assert not v.flagged
+    assert v.ranking                     # score mass still reported
+    scores = [s for _, _, s in v.ranking]
+    assert scores == sorted(scores, reverse=True)
+
+
+def test_mixed_campaign_baseline_cells_non_degenerate(cache):
+    """Acceptance: in a mixed-kind multi-severity campaign the baselines
+    produce multi-entry rankings (so recall@k can exceed top-1) and the
+    per-detector cells are populated for every detector."""
+    res = run_campaign(MIXED_GRID, workers=0,
+                       detectors=("sloth", "thres", "mscope"),
+                       cache=cache)
+    assert set(res.detector_metrics) == {"sloth", "thres", "mscope"}
+    for name in res.detectors:
+        assert set(res.detector_cells[name]) == set(res.cells)
+    # some positive scenario carries a ≥3-entry thres ranking: both truth
+    # ranks resolved beyond rank 1 implies a real candidate list
+    multi = [o.result_for("thres").truth_ranks
+             for o in res.outcomes if o.positive]
+    assert any(len([r for r in ranks if r is not None]) >= 2
+               or any(r is not None and r >= 3 for r in ranks)
+               for ranks in multi)
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence for the combined mixed-kind, multi-severity grid
+# ---------------------------------------------------------------------------
+
+def test_mixed_grid_executors_bit_identical(mixed_serial):
+    thread = run_campaign(MIXED_GRID, workers=2, executor="thread",
+                          cache=DeploymentCache())
+    process = run_campaign(MIXED_GRID, workers=2, executor="process")
+    for other in (thread, process):
+        assert other.outcomes == mixed_serial.outcomes
+        assert other.metrics == mixed_serial.metrics
+        assert other.cells == mixed_serial.cells
+        assert other.severity_curve() == mixed_serial.severity_curve()
+        assert other.by_truth_kind() == mixed_serial.by_truth_kind()
+
+
+# ---------------------------------------------------------------------------
+# simulator: mixed-kind windows coexist and compound
+# ---------------------------------------------------------------------------
+
+def test_mixed_kind_failures_compound_in_one_run(cache):
+    """A core failure and a link failure injected together each keep
+    their own slowdown window; the combined run is slower than either
+    alone (core and link windows live in separate tables and compound)."""
+    dep = cache.get("darknet19", 4, 4)
+    sloth = dep.sloth
+    cfg = dataclasses.replace(sloth.sim_cfg, seed=0)
+    horizon = dep.healthy.total_time * 4
+    busy_link = dep.used_links[0]
+    core_f = FailSlow("core", 5, 0.0, horizon, 6.0)
+    link_f = FailSlow("link", busy_link, 0.0, horizon, 6.0)
+    t_base = simulate(sloth.mapped, cfg).total_time
+    t_core = simulate(sloth.mapped, cfg, failures=[core_f]).total_time
+    t_link = simulate(sloth.mapped, cfg, failures=[link_f]).total_time
+    t_both = simulate(sloth.mapped, cfg,
+                      failures=[core_f, link_f]).total_time
+    assert t_core > t_base and t_link > t_base
+    assert t_both >= max(t_core, t_link)
+
+
+# ---------------------------------------------------------------------------
+# make_dataset: router coverage + duration range
+# ---------------------------------------------------------------------------
+
+def test_make_dataset_router_ratio_default_preserves_draws():
+    """router_ratio=0 must reproduce the historical two-kind draws
+    bit-for-bit (same seed, same samples) — the parameter dilutes the
+    population only when asked."""
+    mesh = Mesh2D(4)
+    old = make_dataset(mesh, 24, seed=7)
+    new = make_dataset(mesh, 24, seed=7, router_ratio=0.0)
+    assert old == new
+    assert all(s.failure.kind in ("core", "link")
+               for s in old if s.failure is not None)
+
+
+def test_make_dataset_router_ratio_emits_routers():
+    mesh = Mesh2D(4)
+    ds = make_dataset(mesh, 200, seed=7, router_ratio=0.3)
+    kinds = [s.failure.kind for s in ds if s.failure is not None]
+    frac = kinds.count("router") / len(kinds)
+    assert 0.2 < frac < 0.4
+    assert set(kinds) == {"core", "link", "router"}
+    # router locations are router (= core) ids
+    for s in ds:
+        if s.failure is not None and s.failure.kind == "router":
+            assert 0 <= s.failure.location < mesh.n_cores
+    # all-router datasets are expressible too
+    only = make_dataset(mesh, 20, seed=7, router_ratio=1.0)
+    assert all(s.failure.kind == "router"
+               for s in only if s.failure is not None)
+    with pytest.raises(ValueError, match="router_ratio"):
+        make_dataset(mesh, 10, router_ratio=1.5)
+
+
+def test_effective_samples_drops_unobservable_routers():
+    """A router none of whose links carry traffic cannot affect execution
+    — with mesh provided, effective_samples excludes it (the same
+    invariant the campaign's used_routers pool enforces)."""
+    from repro.core.failures import Sample, effective_samples
+    mesh = Mesh2D(4)
+    dead, live = 0, 5
+    used = (set(mesh.links_of_router(live))
+            - set(mesh.links_of_router(dead)))   # dead router fully unused
+    assert used
+    samples = [Sample(0, FailSlow("router", dead, 0.0, 5.0, 10.0)),
+               Sample(1, FailSlow("router", live, 0.0, 5.0, 10.0)),
+               Sample(2, None)]
+    kept = effective_samples(samples, 10.0, used, mesh)
+    assert [s.sample_id for s in kept] == [1, 2]
+    # without a mesh the router filter cannot apply and samples survive
+    kept = effective_samples(samples, 10.0, used)
+    assert [s.sample_id for s in kept] == [0, 1, 2]
+
+
+def test_make_dataset_duration_range_matches_doc():
+    """The reconciled §IV-A distribution: durations U(1, 10) s — stated
+    in the module docstring, the make_dataset signature and the drawn
+    samples alike."""
+    mesh = Mesh2D(4)
+    ds = make_dataset(mesh, 200, seed=11)
+    durs = [s.failure.duration for s in ds if s.failure is not None]
+    assert min(durs) >= 1.0 and max(durs) <= 10.0
+    import repro.core.failures as F
+    assert "U(1, 10)" in F.__doc__
+    assert "U(min_dur,\n    max_dur) = U(1, 10) s" in F.make_dataset.__doc__

@@ -82,7 +82,9 @@ def test_baselines_run(sloth):
         det = get_detector(name)().prepare(sloth.graph, sloth.mesh, profile)
         v = det.analyse(sim)
         assert v.detector == name and v.mesh is sloth.mesh
-        assert bool(v.ranking) == v.flagged     # single-entry ranking
+        if v.flagged:                # ranking is led by the top-1 verdict
+            assert v.ranking
+            assert v.ranking[0][:2] == (v.kind, v.location)
         flags[name] = (v.flagged, v.kind, v.location)
     # the stronger baselines find the core failure
     assert flags["thres"][0] and flags["perseus"][0]
