@@ -189,6 +189,63 @@ def bench_storage():
 
 
 # ---------------------------------------------------------------------------
+# recorder pipeline: per-run numpy oracle vs on-device batched run path
+# ---------------------------------------------------------------------------
+
+def bench_recorder(reps=None):
+    """Recorder wall time, ``impl="ref"`` (per-run numpy oracle) vs
+    ``impl="batched"`` (run-compressed on-device scan with the
+    drained-eviction stream), on healthy traces of the campaign-default
+    workload and the comm-heavy ResNet-50.  Asserts pattern parity —
+    identical key sets, counts, arrival order, drained-row counts and
+    compression ratios — before reporting timings, so the speedup rows
+    can only exist when both paths compress identically."""
+    reps = reps or (10 if FULL else 4)
+    mesh = Mesh2D(4)
+    rows = []
+    for wl in ("darknet19", "resnet50"):
+        sloth = Sloth(build_workload(wl), mesh)
+        sim = sloth.run(None, seed=0)
+        hop = sloth.sim_cfg.hop_latency
+
+        def run(impl):
+            return record(sim, sloth.cfg.sketch,
+                          hop_latency=hop, impl=impl)
+
+        ref, bat = run("ref"), run("batched")   # batched call also warms jit
+        for side in ("comp", "comm"):
+            pr = {p.key: p for p in getattr(ref, side + "_patterns")}
+            pb = {p.key: p for p in getattr(bat, side + "_patterns")}
+            assert set(pr) == set(pb), f"{wl} {side}: key sets diverge"
+            assert all(pr[k].count == pb[k].count
+                       and pr[k].arrival == pb[k].arrival for k in pr), \
+                f"{wl} {side}: counts/arrivals diverge"
+        assert ref.compression_ratio == bat.compression_ratio
+        assert (ref.n_comp_drained, ref.n_comm_drained) \
+            == (bat.n_comp_drained, bat.n_comm_drained)
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run("ref")
+        us_ref = (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run("batched")
+        us_bat = (time.perf_counter() - t0) / reps * 1e6
+        rows += [
+            (f"recorder_{wl}_ref_us", round(us_ref, 1),
+             round(us_ref / 1e3, 2)),
+            (f"recorder_{wl}_batched_us", round(us_bat, 1),
+             round(us_bat / 1e3, 2)),
+            (f"recorder_{wl}_batched_speedup_x", 0.0,
+             round(us_ref / us_bat, 2)),
+            (f"recorder_{wl}_compression_x", 0.0,
+             round(ref.compression_ratio, 1)),
+        ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Fig 13: sketch parameter sensitivity (H, B, S, T heatmaps)
 # ---------------------------------------------------------------------------
 
@@ -420,6 +477,6 @@ def bench_mixed_kind(reps=None):
 
 
 ALL = [bench_impact, bench_accuracy, bench_probe_overhead, bench_storage,
-       bench_sketch_params, bench_dse, bench_failrank_convergence,
-       bench_scalability, bench_multi_failure, bench_severity,
-       bench_mixed_kind]
+       bench_recorder, bench_sketch_params, bench_dse,
+       bench_failrank_convergence, bench_scalability, bench_multi_failure,
+       bench_severity, bench_mixed_kind]

@@ -26,6 +26,18 @@ composites; ``--severities`` accepts plain slowdown factors and
 ``linspace:LO:HI:N`` sweep specs.  Campaigns with several severities
 print the ``severity_curve()`` readout; mixed-kind campaigns print the
 per-truth-kind recall split.
+
+``--recorder-impl`` selects the SL-Recorder sketch path: ``ref`` (per-run
+numpy oracle, the default), ``batched`` (on-device run-compressed JAX
+scan with the drained-eviction stream) or ``both`` — which runs the
+campaign once per impl and asserts scenario-for-scenario identical
+verdicts and compression ratios (the recorder-parity smoke used in CI).
+Compression ratios and pattern structure are integer-derived and always
+bit-identical; verdict fields pass through thresholded float scores, and
+the batched path keeps Stage-2 statistics in float32 vs the oracle's
+float64 — so run ``both`` on decisively-failing grids (the CI smoke's
+8× severity), not on near-threshold sweeps where a score within f32
+rounding of a flag threshold could legitimately diverge.
 """
 
 import argparse
@@ -38,6 +50,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core.campaign import CampaignGrid, run_campaign  # noqa: E402
 from repro.core.detectors import (DEFAULT_DETECTORS,  # noqa: E402
                                   available_detectors)
+from repro.core.recorder import RECORDER_IMPLS  # noqa: E402
+from repro.core.sloth import SlothConfig  # noqa: E402
 
 
 def make_grid(args) -> CampaignGrid:
@@ -97,6 +111,12 @@ def main(argv=None) -> int:
     ap.add_argument("--all-detectors", action="store_true",
                     help="shorthand for every registered detector "
                          "(SLOTH + the five baselines)")
+    ap.add_argument("--recorder-impl", default="ref",
+                    choices=RECORDER_IMPLS + ("both",),
+                    help="SL-Recorder sketch path: per-run numpy oracle "
+                         "(ref), on-device batched run-compressed scan "
+                         "(batched), or 'both' to run the campaign twice "
+                         "and assert identical verdicts + compression")
     args = ap.parse_args(argv)
 
     detectors = (DEFAULT_DETECTORS if args.all_detectors
@@ -109,7 +129,8 @@ def main(argv=None) -> int:
           f"{len(grid.severities)} severities × "
           f"{len(grid.n_failures)} n_failures × {grid.reps} reps "
           f"= {n} scenarios (seed {grid.campaign_seed}, "
-          f"executor {args.executor}, detectors {', '.join(detectors)})")
+          f"executor {args.executor}, detectors {', '.join(detectors)}, "
+          f"recorder {args.recorder_impl})")
 
     done = []
 
@@ -118,10 +139,39 @@ def main(argv=None) -> int:
         if len(done) % 10 == 0 or len(done) == n:
             print(f"  ... {len(done)}/{n} scenarios", flush=True)
 
+    cfg = (None if args.recorder_impl in ("ref", "both")
+           else SlothConfig(recorder_impl=args.recorder_impl))
     t0 = time.perf_counter()
     res = run_campaign(grid, workers=args.workers, executor=args.executor,
-                       detectors=detectors, progress=progress)
+                       detectors=detectors, cfg=cfg, progress=progress)
     wall = time.perf_counter() - t0
+
+    if args.recorder_impl == "both":
+        res_b = run_campaign(grid, workers=args.workers,
+                             executor=args.executor, detectors=detectors,
+                             cfg=SlothConfig(recorder_impl="batched"))
+        # explicit raises, not asserts: this is the CI parity gate and
+        # must still fail under python -O
+        for a, b in zip(res.outcomes, res_b.outcomes):
+            if a.compression_ratio != b.compression_ratio:
+                raise SystemExit(
+                    f"recorder parity FAILED: scenario {a.scenario_id} "
+                    f"compression ref={a.compression_ratio} "
+                    f"batched={b.compression_ratio}")
+            for da, db in zip(a.detector_results, b.detector_results):
+                ka = (da.detector, da.flagged, da.pred_kind,
+                      da.pred_location, da.matched, da.truth_rank,
+                      da.truth_ranks)
+                kb = (db.detector, db.flagged, db.pred_kind,
+                      db.pred_location, db.matched, db.truth_rank,
+                      db.truth_ranks)
+                if ka != kb:
+                    raise SystemExit(
+                        f"recorder parity FAILED: scenario "
+                        f"{a.scenario_id} ref={ka} batched={kb}")
+        print(f"\nrecorder parity: ref == batched on all "
+              f"{len(res.outcomes)} scenarios (verdicts, ranks, "
+              f"compression ratios)")
 
     print(f"\n== per-cell (workload, mesh, kind, severity, n_failures) ==")
     for (wl, w, h, kind, sev, nf), m in res.cells.items():

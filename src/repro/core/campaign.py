@@ -85,6 +85,18 @@ outcome equality, surfaced by ``CampaignResult.summary()``).  The old
 ``baselines: bool`` flag survives as a deprecation shim that expands to
 ``detectors=DEFAULT_DETECTORS``.
 
+The SL-Recorder implementation is likewise campaign-selectable: the
+``cfg`` a campaign passes keys the deployment cache, so
+``run_campaign(grid, cfg=SlothConfig(recorder_impl="batched"))`` measures
+the on-device batched recorder (run-compressed scan + drained-eviction
+stream) against the same scenarios the default per-run oracle sees.
+Compression ratios, pattern key sets, counts and eviction structure are
+bit-identical across impls; verdicts agree wherever detector scores are
+not within float32 rounding of a flag threshold (the batched Stage-2
+statistics are f32 vs the oracle's f64), which
+``examples/campaign_sweep.py --recorder-impl both`` asserts on its
+decisively-failing CI grid.
+
 Execution model
 ---------------
 ``run_campaign(..., workers=N, executor='thread'|'process')``:

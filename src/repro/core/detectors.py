@@ -115,6 +115,12 @@ class Detector(Protocol):
     instrumented trace.  ``prepare`` must be deterministic in its inputs —
     the campaign's process-pool workers rebuild detectors independently
     and their verdicts must be bit-identical to the parent's.
+
+    ``cfg`` carries implementation selection as well as thresholds: e.g.
+    ``SlothConfig.recorder_impl`` chooses the SL-Recorder sketch path
+    ("ref" oracle vs on-device "batched"), so the campaign layer can
+    compare deployable pipelines purely through the config it hands to
+    ``prepare``.
     """
 
     name: str

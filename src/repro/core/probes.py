@@ -121,6 +121,21 @@ def raw_bytes(comp_records: int, comm_records: int) -> int:
 # A pattern identifies traces "with similar execution behaviours" (§III-C):
 # compute: (core, stage, op-type, flops bucket); comm: (src, dst, volume
 # bucket).  Keys are packed into int64 for the sketch.
+#
+# Each key space carries a distinct high type-disambiguation tag bit so a
+# comp key can never alias a comm key bit-for-bit.  (Historical bug: the
+# comm tag was written ``2 << 61``, which equals ``1 << 62`` — the comp
+# tag — so e.g. comp(core=5, stage=1, op=0, fb=0) and comm(src=5, dst=1,
+# stage=0, vb=0) collided exactly.  The spaces only meet inside shared
+# decoding / FailRank consumers, so the recorder's separate sketches
+# masked the aliasing.)  The comm tag sits at bit 61, inside the 62 bits
+# the sketch's (lo, hi) int32 halves preserve; the comp tag at bit 62 is
+# outside them and is restored from the key space by the batched recorder
+# path when it rebuilds keys from sketch state.
+
+COMP_KEY_TAG = 1 << 62
+COMM_KEY_TAG = 1 << 61
+
 
 def comp_pattern_keys(comp: dict[str, np.ndarray]) -> np.ndarray:
     fb = np.clip(np.log2(np.maximum(comp["flops"], 1.0)).astype(np.int64),
@@ -128,7 +143,7 @@ def comp_pattern_keys(comp: dict[str, np.ndarray]) -> np.ndarray:
     return (comp["core"].astype(np.int64)
             + (comp["stage"].astype(np.int64) << 12)
             + (comp["op"].astype(np.int64) << 28)
-            + (fb << 34) + (1 << 62))
+            + (fb << 34) + COMP_KEY_TAG)
 
 
 def comm_pattern_keys(comm: dict[str, np.ndarray]) -> np.ndarray:
@@ -137,7 +152,7 @@ def comm_pattern_keys(comm: dict[str, np.ndarray]) -> np.ndarray:
     return (comm["src"].astype(np.int64)
             + (comm["dst"].astype(np.int64) << 12)
             + (comm["stage"].astype(np.int64) << 24)
-            + (vb << 40) + (2 << 61))
+            + (vb << 40) + COMM_KEY_TAG)
 
 
 def decode_comp_key(key: int) -> dict:

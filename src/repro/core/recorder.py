@@ -3,6 +3,22 @@
 Separate sketches are kept for computation and communication traces (the
 paper reports their storage separately, Figs 11/12).  Instruction expansion
 is fed to the sketch as exact run-length runs (`insert_run`) for speed.
+
+Two interchangeable sketch implementations (``record(..., impl=...)``):
+
+* ``impl="ref"`` (default) — the per-run numpy oracle
+  (:class:`~repro.core.sketch.FailSlowSketch.insert_run`), one Python
+  call per run.  The ground truth, and the bit-stable historical path.
+* ``impl="batched"`` — the on-device run-compressed JAX path
+  (:func:`repro.kernels.sketch_update.ops.insert_runs`): one
+  ``lax.scan`` over runs against the packed sketch state, with Stage-2
+  FIFO evictions preserved in the drained-eviction stream — the
+  deployable Algorithm-1 pipeline the paper's on-chip numbers describe.
+
+Both paths produce the same merged (live + drained) pattern lists —
+bit-identical keys / counts / arrival order and float statistics to f32
+tolerance — and byte-identical compression accounting, so campaign
+compression ratios are comparable across impls.
 """
 
 from __future__ import annotations
@@ -12,8 +28,11 @@ import dataclasses
 import numpy as np
 
 from . import probes as P
-from .sketch import FailSlowSketch, Pattern, SketchParams
+from .sketch import FailSlowSketch, Pattern, SketchParams, split_key
 from .simulator import SimResult
+
+#: Valid ``record(..., impl=)`` spellings.
+RECORDER_IMPLS = ("ref", "batched")
 
 
 @dataclasses.dataclass
@@ -26,6 +45,11 @@ class RecorderOutput:
     sketch_comm_bytes: int
     n_comp_records: int
     n_comm_records: int
+    # drained-eviction stream depth (Stage-2 FIFO victims written off-chip;
+    # included in sketch_*_bytes at stage2_bytes() / L each)
+    n_comp_drained: int = 0
+    n_comm_drained: int = 0
+    impl: str = "ref"
 
     @property
     def raw_bytes(self) -> int:
@@ -40,28 +64,92 @@ class RecorderOutput:
         return self.raw_bytes / max(self.sketch_bytes, 1)
 
 
+def _sketch_runs_ref(params: SketchParams, keys, reps, durs, vals, t0s,
+                     dts):
+    """Per-run numpy oracle path."""
+    sk = FailSlowSketch(params)
+    sk.insert_runs(keys, reps, durs, vals, t0s, dts)
+    return sk.patterns(), sk.compressed_bytes(), sk.n_evicted
+
+
+def _sketch_runs_batched(params: SketchParams, keys, reps, durs, vals,
+                         t0s, dts, key_tag: int):
+    """On-device run-compressed path: one scan over runs, drained
+    evictions preserved, keys rebuilt with the sketch-truncated tag bit
+    restored (see :func:`repro.kernels.sketch_update.ops.patterns`)."""
+    # lazy: keep the default ref path (and process-pool workers that only
+    # use it) free of the jax import
+    import jax.numpy as jnp
+
+    from ..kernels.sketch_update import ops as sketch_ops
+
+    lo, hi = split_key(np.asarray(keys, dtype=np.int64))
+    state = sketch_ops.make_state(params)
+    drain = sketch_ops.make_drain(len(keys))
+    state, drain = sketch_ops.insert_runs(
+        state, drain, jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(np.asarray(reps, dtype=np.int32)),
+        jnp.asarray(np.asarray(durs, dtype=np.float32)),
+        jnp.asarray(np.asarray(vals, dtype=np.float32)),
+        jnp.asarray(np.asarray(t0s, dtype=np.float32)),
+        jnp.asarray(np.asarray(dts, dtype=np.float32)), params=params)
+    pats = sketch_ops.patterns(state, drain, key_tag=key_tag)
+    n_drained = int(np.asarray(drain["d_n"]))
+    per_pattern = params.stage2_bytes() // max(params.L, 1)
+    return pats, params.total_bytes() + n_drained * per_pattern, n_drained
+
+
+def _sketch_runs(impl: str, params: SketchParams, keys, reps, durs, vals,
+                 t0s, dts, key_tag: int):
+    if impl == "batched":
+        return _sketch_runs_batched(params, keys, reps, durs, vals, t0s,
+                                    dts, key_tag)
+    return _sketch_runs_ref(params, keys, reps, durs, vals, t0s, dts)
+
+
 def record(sim: SimResult, params: SketchParams,
            comm_params: SketchParams | None = None,
            instr_per_task: int = 64,
            packet_bytes: int = P.PACKET_BYTES,
            max_packets: int = 64,
-           hop_latency: float = 50e-9) -> RecorderOutput:
+           hop_latency: float = 50e-9,
+           impl: str = "ref") -> RecorderOutput:
+    """Compress one simulated trace into comp/comm pattern lists.
+
+    ``impl`` selects the sketch implementation (see the module
+    docstring): ``"ref"`` runs the per-run numpy oracle on host;
+    ``"batched"`` runs the vectorized on-device path (run-compressed
+    ``lax.scan``, packed state, drained-eviction stream).  Pattern lists
+    always merge live Stage-2 entries with FIFO-drained partials —
+    analysis sees every promoted pattern regardless of eviction pressure
+    — and ``sketch_*_bytes`` accounts the drained rows at one Stage-2
+    slot each (on-chip state + the off-chip compressed stream), so the
+    compression ratio is the deployable end-to-end figure on both paths.
+    """
+    if impl not in RECORDER_IMPLS:
+        raise ValueError(f"unknown recorder impl {impl!r}; "
+                         f"options: {RECORDER_IMPLS}")
     comm_params = comm_params or params
 
-    comp_sketch = FailSlowSketch(params)
     comp = sim.comp
     n_comp = 0
+    comp_patterns: list[Pattern] = []
+    comp_bytes = params.total_bytes()
+    n_comp_drained = 0
     if len(comp["core"]):
         keys = P.comp_pattern_keys(comp)
         r = instr_per_task
         durs = (comp["t_end"] - comp["t_start"]) / r
-        comp_sketch.insert_runs(keys, np.full(len(keys), r), durs,
-                                comp["flops"] / r, comp["t_start"], durs)
+        comp_patterns, comp_bytes, n_comp_drained = _sketch_runs(
+            impl, params, keys, np.full(len(keys), r), durs,
+            comp["flops"] / r, comp["t_start"], durs, P.COMP_KEY_TAG)
         n_comp = len(keys) * r
 
-    comm_sketch = FailSlowSketch(comm_params)
     comm = sim.comm
     n_comm = 0
+    comm_patterns: list[Pattern] = []
+    comm_bytes = comm_params.total_bytes()
+    n_comm_drained = 0
     if len(comm["src"]):
         keys = P.comm_pattern_keys(comm)
         pk = np.clip(np.ceil(comm["bytes"] / packet_bytes).astype(np.int64),
@@ -74,17 +162,21 @@ def record(sim: SimResult, params: SketchParams,
         lat = comm["hops"] * hop_latency
         per = np.maximum(comm["service"] - lat, 0.0) / pk + lat
         wall = (comm["t_arrive"] - comm["t_depart"]) / pk
-        comm_sketch.insert_runs(keys, pk, per, comm["bytes"] / pk,
-                                comm["t_depart"], wall)
+        comm_patterns, comm_bytes, n_comm_drained = _sketch_runs(
+            impl, comm_params, keys, pk, per, comm["bytes"] / pk,
+            comm["t_depart"], wall, P.COMM_KEY_TAG)
         n_comm = int(pk.sum())
 
     return RecorderOutput(
-        comp_patterns=comp_sketch.patterns(),
-        comm_patterns=comm_sketch.patterns(),
+        comp_patterns=comp_patterns,
+        comm_patterns=comm_patterns,
         raw_comp_bytes=n_comp * P.COMP_RECORD_BYTES,
         raw_comm_bytes=n_comm * P.COMM_RECORD_BYTES,
-        sketch_comp_bytes=comp_sketch.compressed_bytes(),
-        sketch_comm_bytes=comm_sketch.compressed_bytes(),
+        sketch_comp_bytes=comp_bytes,
+        sketch_comm_bytes=comm_bytes,
         n_comp_records=n_comp,
         n_comm_records=n_comm,
+        n_comp_drained=n_comp_drained,
+        n_comm_drained=n_comm_drained,
+        impl=impl,
     )

@@ -109,6 +109,27 @@ class Pattern:
         return self.t_last - self.t_first
 
 
+def accumulate_pattern(merged: dict[int, Pattern], p: Pattern) -> None:
+    """Merge the partial pattern ``p`` into ``merged`` by key: counts and
+    sums add, time bounds and ``min_dur`` extremise, ``arrival`` keeps the
+    earliest.  The one definition of partial-pattern merging — shared by
+    the oracle's ``patterns(include_drained=True)`` and the kernel-side
+    decode (``kernels/sketch_update/ops.patterns``), whose exact agreement
+    is the ref-vs-batched parity contract."""
+    q = merged.get(p.key)
+    if q is None:
+        merged[p.key] = dataclasses.replace(p)
+        return
+    q.count += p.count
+    q.sum_dur += p.sum_dur
+    q.sum_sq_dur += p.sum_sq_dur
+    q.sum_val += p.sum_val
+    q.t_first = min(q.t_first, p.t_first)
+    q.t_last = max(q.t_last, p.t_last)
+    q.min_dur = min(q.min_dur, p.min_dur)
+    q.arrival = min(q.arrival, p.arrival)
+
+
 class FailSlowSketch:
     """Numpy reference implementation of Algorithm 1."""
 
@@ -250,18 +271,7 @@ class FailSlowSketch:
             return sorted(live, key=lambda p: p.arrival)
         merged: dict[int, Pattern] = {}
         for p in self.drained + live:
-            q = merged.get(p.key)
-            if q is None:
-                merged[p.key] = dataclasses.replace(p)
-            else:
-                q.count += p.count
-                q.sum_dur += p.sum_dur
-                q.sum_sq_dur += p.sum_sq_dur
-                q.sum_val += p.sum_val
-                q.t_first = min(q.t_first, p.t_first)
-                q.t_last = max(q.t_last, p.t_last)
-                q.min_dur = min(q.min_dur, p.min_dur)
-                q.arrival = min(q.arrival, p.arrival)
+            accumulate_pattern(merged, p)
         return sorted(merged.values(), key=lambda p: p.arrival)
 
     def onchip_bytes(self) -> int:
@@ -279,8 +289,12 @@ class FailSlowSketch:
 
 def retention_lower_bound(N: float, f_i: float, params: SketchParams)\
         -> float:
-    """Lemma 3.1: P(R_i) ≥ 1 − ((N − f_i) / (m (f_i − H)))^d."""
+    """Lemma 3.1: P(R_i) ≥ 1 − ((N − f_i) / (m (f_i − H)))^d.
+
+    The result is a probability, clamped to [0, 1]: for ``N < f_i`` the
+    numerator goes negative and an odd ``d`` would push ``1 − x**d``
+    above 1."""
     if f_i <= params.H:
         return 0.0
     x = (N - f_i) / (params.m * (f_i - params.H))
-    return max(0.0, 1.0 - x ** params.d)
+    return min(1.0, max(0.0, 1.0 - x ** params.d))

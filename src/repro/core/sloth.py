@@ -60,6 +60,14 @@ class SlothConfig:
     link_ratio_flag: float = 3.0
     detect_threshold: float = 0.55   # min initial prob to report a failure
     instr_per_task: int = 64
+    # Recorder sketch implementation: "ref" (per-run numpy oracle, the
+    # bit-stable historical path) or "batched" (on-device run-compressed
+    # JAX scan with the drained-eviction stream — the deployable path).
+    # Flows through record(..., impl=...) and, because the campaign's
+    # DeploymentCache keys deployments on the config repr, selects the
+    # recorder per campaign via run_campaign(cfg=SlothConfig(
+    # recorder_impl="batched")).
+    recorder_impl: str = "ref"
     # -- mesh-size-aware flag scaling --------------------------------------
     # The flag thresholds are calibrated on the paper's 4×4 chip (16 cores,
     # 48 links).  The expected extreme of a *healthy* population grows with
@@ -115,7 +123,8 @@ class Sloth:
     def analyse(self, sim: SimResult) -> Verdict:
         cfg = self.cfg
         rec = record(sim, cfg.sketch, instr_per_task=cfg.instr_per_task,
-                     hop_latency=self.sim_cfg.hop_latency)
+                     hop_latency=self.sim_cfg.hop_latency,
+                     impl=cfg.recorder_impl)
         core_z = cfg.effective_core_z(self.mesh.n_cores)
         link_ratio = cfg.effective_link_ratio(self.mesh.n_links)
         core_cands = detect_cores(rec.comp_patterns, sim.total_time,

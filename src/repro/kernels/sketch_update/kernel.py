@@ -11,6 +11,14 @@ the Stage-2 list (compare/argmin over L lanes on the VPU).
 State tensors are passed as inputs and aliased to the outputs
 (``input_output_aliases``), so the tables persist across grid steps without
 ever leaving VMEM.
+
+Stage-2 FIFO evictions are appended to the drained-eviction stream
+(``ref.make_drain`` layout, also VMEM-pinned and aliased) before the
+victim row is overwritten — the deployment's DRAM write-back of patterns
+leaving on-chip SRAM, mirroring the numpy oracle's ``drained`` list.
+``sketch_insert(..., drain=None)`` keeps the historical drain-less
+signature (evictions discarded) and returns ``state`` only; passing a
+drain buffer returns ``(state, drain)``.
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from ...core.sketch import HASH_A1, HASH_A2, HASH_B, SketchParams
+from .ref import make_drain
 
 _I32MAX = np.int32(np.iinfo(np.int32).max)
 _BIG = jnp.float32(3.4e38)
@@ -31,6 +40,10 @@ _STATE_KEYS = ("keys_lo", "keys_hi", "valid", "freq",
                "s2_lo", "s2_hi", "s2_valid", "s2_count",
                "s2_sum", "s2_sumsq", "s2_val",
                "s2_tmin", "s2_tmax", "s2_min", "s2_arrival", "counter")
+
+_DRAIN_KEYS = ("d_lo", "d_hi", "d_count", "d_arrival",
+               "d_sum", "d_sumsq", "d_val", "d_tmin", "d_tmax", "d_min",
+               "d_n")
 
 
 def _hash_scalar(lo, hi, table: int, m: int):
@@ -47,12 +60,14 @@ def _hash_scalar(lo, hi, table: int, m: int):
 
 def _kernel(lo_ref, hi_ref, dur_ref, val_ref, t_ref, act_ref,
             *state_refs,
-            d: int, m: int, H: int, L: int, block: int):
+            d: int, m: int, H: int, L: int, block: int, cap: int):
     # state arrives twice (inputs, then aliased outputs); operate on the
     # output refs — aliasing makes them carry the live state.
     (klo, khi, vld, frq,
      s2lo, s2hi, s2v, s2c, s2s, s2q, s2val, s2tmin, s2tmax, s2min,
-     s2arr, counter) = state_refs[len(state_refs) // 2:]
+     s2arr, counter,
+     dlo, dhi, dcnt, darr, dsum, dsq, dval, dtmin, dtmax, dmin,
+     dnum) = state_refs[len(state_refs) // 2:]
 
     def body(k, _):
         lo = lo_ref[k]
@@ -94,6 +109,20 @@ def _kernel(lo_ref, hi_ref, dur_ref, val_ref, t_ref, act_ref,
         j_evict = jnp.argmin(jnp.where(v == 1, s2arr[:], _I32MAX))
         j = jnp.where(exists, j_upd, jnp.where(any_free, j_free, j_evict))
 
+        # ---- drain the FIFO victim before its slot is overwritten -----
+        # (index-clamped: an undersized buffer saturates, never scatters
+        # out of bounds)
+        evict = promoted & (~exists) & (~any_free)
+        dn = dnum[0]
+        slot = jnp.minimum(dn, cap - 1)
+        keep = evict & (dn < cap)
+        for dref, sref in ((dlo, s2lo), (dhi, s2hi), (dcnt, s2c),
+                           (darr, s2arr), (dsum, s2s), (dsq, s2q),
+                           (dval, s2val), (dtmin, s2tmin),
+                           (dtmax, s2tmax), (dmin, s2min)):
+            dref[slot] = jnp.where(keep, sref[j], dref[slot])
+        dnum[0] = dn + keep.astype(jnp.int32)
+
         def put(ref, on_upd, on_new):
             old = ref[j]
             ref[j] = jnp.where(promoted,
@@ -121,9 +150,16 @@ def _kernel(lo_ref, hi_ref, dur_ref, val_ref, t_ref, act_ref,
 @partial(jax.jit, static_argnames=("params", "block", "interpret"))
 def sketch_insert(state: dict, lo, hi, dur, val, t, *,
                   params: SketchParams, block: int = 256,
-                  interpret: bool = True):
+                  interpret: bool = True, drain: dict | None = None):
     """Insert a batch of records into the sketch state via the Pallas
-    kernel.  State layout matches ``ref.make_state``."""
+    kernel.  State layout matches ``ref.make_state``.  With a
+    ``ref.make_drain`` buffer, Stage-2 FIFO evictions are appended to it
+    and ``(state, drain)`` is returned; without one the historical
+    drain-less behaviour (evictions discarded, ``state`` returned) is
+    preserved."""
+    want_drain = drain is not None
+    if not want_drain:
+        drain = make_drain(1)
     n = lo.shape[0]
     nb = -(-n // block)
     pad = nb * block - n
@@ -143,19 +179,24 @@ def sketch_insert(state: dict, lo, hi, dur, val, t, *,
                        t.astype(jnp.float32))
 
     p = params
+    cap = drain["d_lo"].shape[0]
     trace_spec = pl.BlockSpec((block,), lambda i: (i,))
     tbl_spec = pl.BlockSpec((p.d, p.m), lambda i: (0, 0))
     vec_spec = pl.BlockSpec((p.L,), lambda i: (0,))
+    drain_spec = pl.BlockSpec((cap,), lambda i: (0,))
     one_spec = pl.BlockSpec((1,), lambda i: (0,))
-    state_specs = [tbl_spec] * 4 + [vec_spec] * 11 + [one_spec]
+    state_specs = ([tbl_spec] * 4 + [vec_spec] * 11 + [one_spec]
+                   + [drain_spec] * 10 + [one_spec])
 
-    state_in = [state[k] if k != "counter" else state[k].reshape(1)
-                for k in _STATE_KEYS]
+    state_in = ([state[k] if k != "counter" else state[k].reshape(1)
+                 for k in _STATE_KEYS]
+                + [drain[k] if k != "d_n" else drain[k].reshape(1)
+                   for k in _DRAIN_KEYS])
     out_shapes = [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in state_in]
     n_trace = 6
 
     out = pl.pallas_call(
-        partial(_kernel, d=p.d, m=p.m, H=p.H, L=p.L, block=block),
+        partial(_kernel, d=p.d, m=p.m, H=p.H, L=p.L, block=block, cap=cap),
         grid=(nb,),
         in_specs=[trace_spec] * n_trace + state_specs,
         out_specs=state_specs,
@@ -164,6 +205,10 @@ def sketch_insert(state: dict, lo, hi, dur, val, t, *,
                               for i in range(len(state_in))},
         interpret=interpret,
     )(lo, hi, dur, val, t, act, *state_in)
-    new_state = dict(zip(_STATE_KEYS, out))
+    new_state = dict(zip(_STATE_KEYS, out[:len(_STATE_KEYS)]))
     new_state["counter"] = new_state["counter"].reshape(())
-    return new_state
+    if not want_drain:
+        return new_state
+    new_drain = dict(zip(_DRAIN_KEYS, out[len(_STATE_KEYS):]))
+    new_drain["d_n"] = new_drain["d_n"].reshape(())
+    return new_state, new_drain

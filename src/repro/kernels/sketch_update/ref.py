@@ -12,6 +12,20 @@ State layout (arrays; L = Stage-2 capacity, d×m = Stage-1 tables):
   s2_tmin/s2_tmax/s2_min            [L]     f32
   s2_arrival                        [L]     int32
   counter                           []      int32 (arrival counter)
+
+Drained-eviction stream (``make_drain``; the deployment's off-chip DRAM
+write stream, mirroring ``FailSlowSketch.drained``):
+  d_lo/d_hi/d_count/d_arrival       [cap]   int32
+  d_sum/d_sumsq/d_val               [cap]   f32
+  d_tmin/d_tmax/d_min               [cap]   f32
+  d_n                               []      int32 (rows written)
+
+A Stage-2 FIFO eviction appends the victim row to the drain buffer before
+it is overwritten, so no promoted pattern is ever lost — the numpy oracle
+keeps these in ``self.drained`` and merges them in ``patterns()``; without
+the stream the packed-state paths silently diverge under eviction
+pressure.  One batch of ``n`` records (or runs) evicts at most ``n`` rows,
+so callers size the buffer with ``make_drain(n)`` per insert call.
 """
 
 from __future__ import annotations
@@ -41,6 +55,21 @@ def make_state(p: SketchParams):
         "s2_min": jnp.full((L,), _BIG, jnp.float32),
         "s2_arrival": jnp.full((L,), jnp.iinfo(jnp.int32).max, jnp.int32),
         "counter": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_drain(capacity: int):
+    """Drained-eviction buffer for ``capacity`` potential evictions (see
+    the module docstring).  The capacity floor of 1 keeps every array
+    indexable — ``d_n`` alone says how many rows are real."""
+    c = max(int(capacity), 1)
+    z = lambda: jnp.zeros((c,), jnp.int32)  # noqa: E731
+    zf = lambda: jnp.zeros((c,), jnp.float32)  # noqa: E731
+    return {
+        "d_lo": z(), "d_hi": z(), "d_count": z(), "d_arrival": z(),
+        "d_sum": zf(), "d_sumsq": zf(), "d_val": zf(),
+        "d_tmin": zf(), "d_tmax": zf(), "d_min": zf(),
+        "d_n": jnp.zeros((), jnp.int32),
     }
 
 

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from proptest import given, settings, st
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
@@ -152,6 +153,138 @@ def test_sketch_batched_promotion_and_evict_edges():
     live = {q.key: q.count for q in O.patterns(st)}
     assert live == {int(k): v.count for k, v in oracle.stage2.items()}
     assert oracle.n_evicted == 1 and 7 not in live   # FIFO victim
+
+
+def _assert_pattern_parity(got, exp, *, check_stats=True):
+    """Merged patterns() parity: exact keys/counts/arrivals, f32-tolerance
+    statistics."""
+    got = {p.key: p for p in got}
+    exp = {p.key: p for p in exp}
+    assert set(got) == set(exp)
+    for k, q in got.items():
+        e = exp[k]
+        assert q.count == e.count and q.arrival == e.arrival, k
+        if check_stats:
+            assert q.sum_dur == pytest.approx(e.sum_dur, rel=1e-4)
+            assert q.sum_val == pytest.approx(e.sum_val, rel=1e-4)
+            assert q.min_dur == pytest.approx(e.min_dur, rel=1e-5)
+            assert q.t_first == pytest.approx(e.t_first, rel=1e-4)
+            assert q.t_last == pytest.approx(e.t_last, rel=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["batched", "pallas"])
+def test_sketch_drain_matches_oracle_under_eviction(impl):
+    """Forced Stage-2 eviction pressure (small L, many distinct promoted
+    keys): the drained-eviction stream preserves every FIFO victim, so
+    merged patterns() — live + drained — equals the numpy oracle's.
+    Without the drain the packed paths silently lose evicted patterns."""
+    from repro.core.sketch import FailSlowSketch, SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O
+    p = SketchParams(d=2, m=64, H=2, L=4)   # L=4 ≪ distinct promoted keys
+    rng = np.random.default_rng(11)
+    n = 500
+    keys = rng.integers(0, 40, size=n).astype(np.int64) * 31337
+    lo, hi = split_key(keys)
+    dur = rng.random(n).astype(np.float32)
+    ts = np.arange(n, dtype=np.float32)
+    oracle = FailSlowSketch(p)
+    oracle.insert_stream(keys, dur, dur * 2, ts.astype(float))
+    assert oracle.n_evicted > p.L            # pressure actually applied
+    st, dr = O.insert(O.make_state(p), jnp.asarray(lo), jnp.asarray(hi),
+                      jnp.asarray(dur), jnp.asarray(dur * 2),
+                      jnp.asarray(ts), params=p, impl=impl,
+                      drain=O.make_drain(n))
+    assert int(np.asarray(dr["d_n"])) == oracle.n_evicted
+    _assert_pattern_parity(O.patterns(st, dr),
+                           oracle.patterns(include_drained=True))
+    # drain-less call still returns the live-only view, unchanged state
+    st2 = O.insert(O.make_state(p), jnp.asarray(lo), jnp.asarray(hi),
+                   jnp.asarray(dur), jnp.asarray(dur * 2),
+                   jnp.asarray(ts), params=p, impl=impl)
+    for k in st2:
+        assert np.array_equal(np.asarray(st[k]), np.asarray(st2[k])), k
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 3),
+       st.sampled_from([8, 16, 64]), st.integers(1, 8),
+       st.sampled_from([2, 4, 16]))
+def test_sketch_run_path_matches_insert_run_oracle(seed, d, m, H, L):
+    """Run-compressed batched insertion ≡ FailSlowSketch.insert_run over
+    randomized runs: bit-identical Stage-1 tables, identical eviction
+    structure, merged patterns (live + drained) equal."""
+    from repro.core.sketch import FailSlowSketch, SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O
+    p = SketchParams(d=d, m=m, H=H, L=L)
+    rng = np.random.default_rng(seed)
+    n = 150
+    keys = rng.integers(0, 20, size=n).astype(np.int64) * 0x9E3779B9
+    reps = rng.integers(1, 12, size=n)      # spans r<H, r≈H and r≫H
+    durs = rng.random(n)
+    vals = rng.random(n) * 3
+    t0s = np.cumsum(rng.random(n))
+    dts = rng.random(n) * 0.01
+    oracle = FailSlowSketch(p)
+    oracle.insert_runs(keys, reps, durs, vals, t0s, dts)
+    lo, hi = split_key(keys)
+    st, dr = O.insert_runs(
+        O.make_state(p), O.make_drain(n), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(reps.astype(np.int32)),
+        jnp.asarray(durs.astype(np.float32)),
+        jnp.asarray(vals.astype(np.float32)),
+        jnp.asarray(t0s.astype(np.float32)),
+        jnp.asarray(dts.astype(np.float32)), params=p)
+    assert np.array_equal(np.asarray(st["freq"]), oracle.freq)
+    assert np.array_equal(np.asarray(st["valid"]),
+                          oracle.valid.astype(np.int32))
+    assert int(np.asarray(dr["d_n"])) == oracle.n_evicted
+    _assert_pattern_parity(O.patterns(st, dr),
+                           oracle.patterns(include_drained=True))
+
+
+def test_sketch_run_path_promotion_and_steal_branches():
+    """Deterministic run-path edge cases against per-record expansion:
+
+    * mid-run promotion boundary — a key with prior Stage-1 freq f0
+      promotes exactly at record k = H − f0 − 1 of the run, so the
+      Stage-2 count must be r − (H − f0 − 1);
+    * bucket steal — a contested bucket with freq f0 < r is cleared by f0
+      decrements, record f0 claims it, and promotion happens at record
+      k = f0 + H − 1;
+    * pure decrement — r ≤ f0 never promotes and may clear the bucket.
+    """
+    from repro.core.sketch import FailSlowSketch, SketchParams, split_key
+    from repro.kernels.sketch_update import ops as O
+    p = SketchParams(d=1, m=1, H=4, L=4)     # one bucket: force the races
+    #       key  r    scenario
+    runs = [(7,  2),  # f0: 0→2 (claims empty bucket, below H)
+            (7,  5),  # mid-run boundary: f0=2, promotes at k=H-f0-1=1 → n=4
+            (9,  3),  # decrement only: r=3 ≤ f0=7 → freq 4, key 7 keeps it
+            (9,  9),  # steal: f0=4 cleared, record 4 claims, k=4+H-1=7 → n=2
+            (5,  3)]  # decrement only again (f0=5 after steal ... )
+    keys = np.array([k for k, _ in runs], dtype=np.int64)
+    reps = np.array([r for _, r in runs], dtype=np.int64)
+    n = len(runs)
+    durs = np.full(n, 0.25)
+    t0s = np.arange(n, dtype=np.float64) * 10
+    dts = np.full(n, 0.5)
+    oracle = FailSlowSketch(p)
+    oracle.insert_runs(keys, reps, durs, durs * 2, t0s, dts)
+    # pin the branch arithmetic itself, not only oracle parity
+    assert oracle.stage2[7].count == 4       # r=5 − first_promo(k=1)
+    assert oracle.stage2[9].count == 2       # r=9 − first_promo(k=7)
+    assert 5 not in oracle.stage2
+    lo, hi = split_key(keys)
+    st, dr = O.insert_runs(
+        O.make_state(p), O.make_drain(n), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(reps.astype(np.int32)),
+        jnp.asarray(durs.astype(np.float32)),
+        jnp.asarray((durs * 2).astype(np.float32)),
+        jnp.asarray(t0s.astype(np.float32)),
+        jnp.asarray(dts.astype(np.float32)), params=p)
+    assert np.array_equal(np.asarray(st["freq"]), oracle.freq)
+    _assert_pattern_parity(O.patterns(st, dr),
+                           oracle.patterns(include_drained=True))
 
 
 # ---------------------------------------------------------------------------

@@ -96,6 +96,24 @@ def test_retention_bound(seed):
         assert hot in s.stage2
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.0, 1e6), st.floats(0.0, 1e6), st.integers(1, 8),
+       st.sampled_from([16, 64, 1024]), st.integers(1, 32))
+def test_retention_bound_is_a_probability(N, f_i, d, m, H):
+    """Lemma 3.1 lower bound stays in [0, 1] over the whole domain —
+    notably N < f_i with odd d, where the unclamped 1 − x**d exceeds 1."""
+    p = SketchParams(d=d, m=m, H=H, L=8)
+    b = retention_lower_bound(N, f_i, p)
+    assert 0.0 <= b <= 1.0, (N, f_i, d, m, H, b)
+
+
+def test_retention_bound_clamped_above():
+    """Regression: N < f_i and odd d made the bound exceed 1 (x < 0 ⇒
+    1 − x**d > 1); it must clamp to exactly 1.0."""
+    p = SketchParams(d=3, m=64, H=4, L=8)
+    assert retention_lower_bound(10.0, 100.0, p) == 1.0
+
+
 def test_split_key_roundtrip():
     keys = np.array([0, 1, 2**31 - 1, 2**40, 2**62 - 1], dtype=np.int64)
     lo, hi = split_key(keys)
