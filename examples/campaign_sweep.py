@@ -38,6 +38,19 @@ the batched path keeps Stage-2 statistics in float32 vs the oracle's
 float64 — so run ``both`` on decisively-failing grids (the CI smoke's
 8× severity), not on near-threshold sweeps where a score within f32
 rounding of a flag threshold could legitimately diverge.
+
+``--streaming N`` runs SLOTH incrementally over each trace split into N
+chunks (the always-on deployment mode): the campaign gains a
+detection-latency column (first flagged chunk's stream time minus the
+earliest failure onset), the summary prints the
+``detection latency: ...`` aggregate, and — as a gate — a second,
+post-hoc campaign is run and every streamed verdict is asserted
+scenario-for-scenario identical to its one-shot counterpart (the
+streaming-equivalence smoke used in CI).  Latency invariants are also
+asserted: ``none``-kind scenarios carry no latency, flagged streamed
+positives a finite one, unflagged streamed positives ``inf``.
+Composes with ``--recorder-impl both`` (each impl gets its own
+streamed-vs-post-hoc comparison).
 """
 
 import argparse
@@ -111,6 +124,11 @@ def main(argv=None) -> int:
     ap.add_argument("--all-detectors", action="store_true",
                     help="shorthand for every registered detector "
                          "(SLOTH + the five baselines)")
+    ap.add_argument("--streaming", type=int, default=0, metavar="N",
+                    help="run SLOTH incrementally over N trace chunks per "
+                         "scenario, report detection latency, and assert "
+                         "streamed verdicts match a post-hoc campaign "
+                         "(0 = post-hoc only, the default)")
     ap.add_argument("--recorder-impl", default="ref",
                     choices=RECORDER_IMPLS + ("both",),
                     help="SL-Recorder sketch path: per-run numpy oracle "
@@ -130,7 +148,9 @@ def main(argv=None) -> int:
           f"{len(grid.n_failures)} n_failures × {grid.reps} reps "
           f"= {n} scenarios (seed {grid.campaign_seed}, "
           f"executor {args.executor}, detectors {', '.join(detectors)}, "
-          f"recorder {args.recorder_impl})")
+          f"recorder {args.recorder_impl}"
+          + (f", streaming {args.streaming} chunks" if args.streaming
+             else "") + ")")
 
     done = []
 
@@ -143,15 +163,61 @@ def main(argv=None) -> int:
            else SlothConfig(recorder_impl=args.recorder_impl))
     t0 = time.perf_counter()
     res = run_campaign(grid, workers=args.workers, executor=args.executor,
-                       detectors=detectors, cfg=cfg, progress=progress)
+                       detectors=detectors, cfg=cfg, progress=progress,
+                       streaming=args.streaming)
     wall = time.perf_counter() - t0
 
+    # explicit raises, not asserts, throughout the gates below: these are
+    # the CI parity smokes and must still fail under python -O
+    def judged(d):
+        return (d.detector, d.flagged, d.pred_kind, d.pred_location,
+                d.matched, d.truth_rank, d.truth_ranks)
+
+    def check_streaming(streamed, label, campaign_cfg):
+        """Streamed verdicts must equal a post-hoc campaign's, and
+        detection latencies must obey the streaming semantics."""
+        posthoc = run_campaign(grid, workers=args.workers,
+                               executor=args.executor, detectors=detectors,
+                               cfg=campaign_cfg)
+        for s, p in zip(streamed.outcomes, posthoc.outcomes):
+            for ds, dp in zip(s.detector_results, p.detector_results):
+                if judged(ds) != judged(dp):
+                    raise SystemExit(
+                        f"streaming equivalence FAILED ({label}): "
+                        f"scenario {s.scenario_id} "
+                        f"streamed={judged(ds)} post-hoc={judged(dp)}")
+                lat = ds.detection_latency
+                if s.kind == "none":
+                    if lat is not None:
+                        raise SystemExit(
+                            f"latency invariant FAILED ({label}): "
+                            f"scenario {s.scenario_id} is failure-free "
+                            f"but has latency {lat}")
+                elif ds.detector == "sloth":
+                    if lat is None:
+                        raise SystemExit(
+                            f"latency invariant FAILED ({label}): "
+                            f"streamed positive scenario "
+                            f"{s.scenario_id} has no latency")
+                    if ds.flagged != (lat != float("inf")):
+                        raise SystemExit(
+                            f"latency invariant FAILED ({label}): "
+                            f"scenario {s.scenario_id} flagged="
+                            f"{ds.flagged} but latency {lat}")
+        print(f"streaming equivalence ({label}): chunked == post-hoc on "
+              f"all {len(streamed.outcomes)} scenarios")
+
+    if args.streaming:
+        check_streaming(res, args.recorder_impl
+                        if args.recorder_impl != "both" else "ref", cfg)
+
     if args.recorder_impl == "both":
+        cfg_b = SlothConfig(recorder_impl="batched")
         res_b = run_campaign(grid, workers=args.workers,
                              executor=args.executor, detectors=detectors,
-                             cfg=SlothConfig(recorder_impl="batched"))
-        # explicit raises, not asserts: this is the CI parity gate and
-        # must still fail under python -O
+                             cfg=cfg_b, streaming=args.streaming)
+        if args.streaming:
+            check_streaming(res_b, "batched", cfg_b)
         for a, b in zip(res.outcomes, res_b.outcomes):
             if a.compression_ratio != b.compression_ratio:
                 raise SystemExit(
@@ -159,19 +225,16 @@ def main(argv=None) -> int:
                     f"compression ref={a.compression_ratio} "
                     f"batched={b.compression_ratio}")
             for da, db in zip(a.detector_results, b.detector_results):
-                ka = (da.detector, da.flagged, da.pred_kind,
-                      da.pred_location, da.matched, da.truth_rank,
-                      da.truth_ranks)
-                kb = (db.detector, db.flagged, db.pred_kind,
-                      db.pred_location, db.matched, db.truth_rank,
-                      db.truth_ranks)
+                ka = judged(da) + (da.detection_latency,)
+                kb = judged(db) + (db.detection_latency,)
                 if ka != kb:
                     raise SystemExit(
                         f"recorder parity FAILED: scenario "
                         f"{a.scenario_id} ref={ka} batched={kb}")
         print(f"\nrecorder parity: ref == batched on all "
               f"{len(res.outcomes)} scenarios (verdicts, ranks, "
-              f"compression ratios)")
+              f"compression ratios"
+              + (", detection latencies" if args.streaming else "") + ")")
 
     print(f"\n== per-cell (workload, mesh, kind, severity, n_failures) ==")
     for (wl, w, h, kind, sev, nf), m in res.cells.items():

@@ -34,4 +34,5 @@ for r in sorted(done, key=lambda r: r.rid)[:4]:
 tok = sum(len(r.out_tokens) for r in done)
 print(f"\nserved {len(done)} requests, {tok} new tokens in {wall:.1f}s "
       f"({tok / wall:.0f} tok/s, CPU smoke config)")
-print(f"mean decode step: {np.mean(engine.step_times[1:]) * 1e3:.1f} ms")
+print(f"mean decode step: {np.mean(engine.decode_times) * 1e3:.1f} ms "
+      f"(mean prefill {np.mean(engine.prefill_times) * 1e3:.1f} ms)")

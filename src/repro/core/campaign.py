@@ -97,6 +97,22 @@ statistics are f32 vs the oracle's f64), which
 ``examples/campaign_sweep.py --recorder-impl both`` asserts on its
 decisively-failing CI grid.
 
+Streaming axis
+--------------
+``run_campaign(..., streaming=N)`` replays every scenario's trace
+chunk-by-chunk through the always-on detection service
+(:mod:`repro.core.streaming`) instead of one-shot post-hoc analysis:
+each detector exposing ``stream_analyse`` observes ``N`` time-ordered
+chunks, emitting one incremental verdict per window.  The final
+streamed verdict is bit-equal to the post-hoc one on both recorder
+impls (same record sequence through the same resident sketch), so the
+judged accuracy/FPR/recall metrics are unchanged — what streaming adds
+is **detection latency**: the simulated time from the earliest failure
+onset to the first flagged window, aggregated by
+``metrics.detection_latency_stats`` into the campaign's
+``metrics.detection`` summary.  ``examples/campaign_sweep.py
+--streaming`` runs the streaming-vs-post-hoc parity gate in CI.
+
 Execution model
 ---------------
 ``run_campaign(..., workers=N, executor='thread'|'process')``:
@@ -134,6 +150,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import multiprocessing
 import os
 import time
@@ -640,12 +657,21 @@ def materialise(grid: CampaignGrid, s: Scenario, dep: Deployment) \
     return tuple(failures), sim_seed
 
 
-def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
-        -> ScenarioOutcome:
+def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
+                 streaming: int = 0) -> ScenarioOutcome:
     """Execute one scenario end-to-end against a cached deployment: one
     simulation, analysed by every prepared detector, every verdict judged
     by the shared router-aware rule (:func:`repro.core.failures
-    .judge_verdict`)."""
+    .judge_verdict`).
+
+    ``streaming > 0`` replays the trace chunk-by-chunk (that many
+    chunks) through every detector exposing ``stream_analyse`` instead
+    of one-shot ``analyse``: the final streamed verdict — guaranteed
+    equal to the post-hoc one — is judged as THE verdict, and positive
+    scenarios additionally record the detection latency (stream time of
+    the first flagged window minus the earliest failure onset; ``inf``
+    when never flagged).  Detectors without ``stream_analyse`` fall back
+    to post-hoc analysis with no latency measurement."""
     failures, sim_seed = materialise(grid, s, dep)
     t0 = time.perf_counter()
     sim = dep.sloth.run(list(failures) if failures else None, seed=sim_seed)
@@ -656,7 +682,15 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
     total_time = float(sim.total_time)
     for det in dep.detectors:
         t1 = time.perf_counter()
-        v = det.analyse(sim)
+        latency = None
+        if streaming > 0 and hasattr(det, "stream_analyse"):
+            v, first_flag = det.stream_analyse(sim, n_chunks=streaming)
+            if failures:
+                onset = min(f.t0 for f in failures)
+                latency = (float(first_flag) - onset
+                           if first_flag is not None else math.inf)
+        else:
+            v = det.analyse(sim)
         wall = time.perf_counter() - t1
         matched, rank, ranks, _ = judge_verdict(v, failures, mesh)
         if compression == 0.0 and v.recorder is not None:
@@ -665,7 +699,7 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
             detector=det.name, flagged=bool(v.flagged), pred_kind=v.kind,
             pred_location=v.location, score=float(v.score),
             matched=matched, truth_rank=rank, truth_ranks=ranks,
-            wall_time=wall))
+            wall_time=wall, detection_latency=latency))
     return ScenarioOutcome(
         scenario_id=s.scenario_id, workload=s.workload,
         mesh_w=s.mesh_w, mesh_h=s.mesh_h, kind=s.kind,
@@ -684,13 +718,13 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment) \
 
 
 def _run_in_worker(grid: CampaignGrid, cfg: SlothConfig | None,
-                   detectors: tuple[str, ...],
+                   detectors: tuple[str, ...], streaming: int,
                    s: Scenario) -> ScenarioOutcome:
     """Process-pool entry point: resolve the deployment from this worker
     process's own cache (lazily built), then run the scenario."""
     dep = _WORKER_CACHE.get(s.workload, s.mesh_w, s.mesh_h,
                             cfg=cfg, detectors=detectors)
-    return run_scenario(grid, s, dep)
+    return run_scenario(grid, s, dep, streaming=streaming)
 
 
 # ---------------------------------------------------------------------------
@@ -748,6 +782,12 @@ class CampaignResult:
             f"(scenario-weighted; unweighted per-deployment "
             f"{m.mean_probe_overhead_unweighted*100:.3f}%)",
         ]
+        if m.detection is not None:
+            d = m.detection
+            lines.append(
+                f"detection latency: mean {d.mean:.4g}s p95 {d.p95:.4g}s "
+                f"(detected {d.n_detected}/{d.n_measured} streamed "
+                f"positives)")
         if len(self.detectors) > 1:
             lines.append("per-detector (acc / FPR / top-3 / recall@3):")
             for name, dm in self.detector_metrics.items():
@@ -782,11 +822,16 @@ class CampaignResult:
         return "\n".join(lines)
 
 
+#: Chunk count used when a campaign requests ``streaming=True``.
+DEFAULT_STREAM_CHUNKS = 4
+
+
 def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
                  executor: str = "thread",
                  cfg: SlothConfig | None = None,
                  detectors=("sloth",),
                  baselines: bool | None = None,
+                 streaming: bool | int = False,
                  cache: DeploymentCache | None = None,
                  progress=None) -> CampaignResult:
     """Run every scenario of ``grid`` and aggregate paper-style metrics.
@@ -800,13 +845,24 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
     ``metrics``/``cells`` (per-detector tables are in
     ``detector_metrics``/``detector_cells``).  ``baselines`` is a
     deprecated alias: ``True`` maps to ``detectors=DEFAULT_DETECTORS``.
-    ``cache`` — share deployments across campaigns (defaults to a
-    process-wide cache; ignored by process-pool workers, which keep their
-    own).
+    ``streaming`` — replay every trace chunk-by-chunk through the
+    streaming detection service instead of one-shot post-hoc analysis
+    (``True`` → ``DEFAULT_STREAM_CHUNKS`` chunks, an int → that many):
+    judged verdicts are unchanged (the final streamed verdict equals the
+    post-hoc one by construction), and positive scenarios additionally
+    report detection latency (``metrics.detection``; see
+    :func:`run_scenario`).  ``cache`` — share deployments across
+    campaigns (defaults to a process-wide cache; ignored by process-pool
+    workers, which keep their own).
     """
     if executor not in EXECUTORS:
         raise ValueError(f"unknown executor {executor!r}; "
                          f"options: {EXECUTORS}")
+    if streaming is True:
+        streaming = DEFAULT_STREAM_CHUNKS
+    streaming = int(streaming)
+    if streaming < 0:
+        raise ValueError("streaming must be False or a chunk count >= 1")
     names = _normalise_detectors(detectors, baselines)
     scenarios = enumerate_scenarios(grid)
     workers = (os.cpu_count() or 1) if workers is None else workers
@@ -817,7 +873,7 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
         # thread pools make fork() after first use prone to deadlock.
         # Workers re-import the package cleanly (sys.path is inherited).
         ctx = multiprocessing.get_context("spawn")
-        fn = functools.partial(_run_in_worker, grid, cfg, names)
+        fn = functools.partial(_run_in_worker, grid, cfg, names, streaming)
         outcomes = []
         with ProcessPoolExecutor(max_workers=workers,
                                  mp_context=ctx) as pool:
@@ -839,7 +895,8 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
 
         def run_one(s: Scenario) -> ScenarioOutcome:
             o = run_scenario(grid, s,
-                             deps[(s.workload, s.mesh_w, s.mesh_h)])
+                             deps[(s.workload, s.mesh_w, s.mesh_h)],
+                             streaming=streaming)
             if progress is not None:
                 progress(o)
             return o

@@ -41,6 +41,14 @@ negatives' FPR alongside) for near-threshold sweeps.  The aggregates are:
 * **recall@k** — fraction of *individual injected failures* (over all
   positives) ranked within the top k; for single-failure grids this
   coincides with top-k,
+* **detection latency** — on streaming campaigns
+  (``run_campaign(streaming=...)``), the simulated time from the
+  earliest failure onset to the first flagged streaming verdict
+  (:func:`detection_latency_stats`: detected fraction with a Wilson CI,
+  mean / p95 over the detected positives).  Per outcome the latency is
+  ``None`` (not streamed / negative), ``inf`` (streamed, never flagged)
+  or finite (detected); it is simulated time, hence deterministic and
+  part of outcome equality,
 * **compression ratio** and **probe overhead** means.  Probe overhead is
   a per-deployment quantity; the headline mean weights each deployment by
   the number of scenarios it served (``mean_probe_overhead``), with the
@@ -80,6 +88,12 @@ class DetectorOutcome:
     # truth_locations
     truth_ranks: tuple = ()
     wall_time: float = dataclasses.field(default=0.0, compare=False)
+    # streaming detection latency (simulated seconds from earliest failure
+    # onset to the first flagged streaming verdict): None when the
+    # scenario was not streamed or is a negative sample, math.inf when
+    # streamed but never flagged, finite when detected.  Deterministic
+    # (simulated time, not wall time), so it participates in equality.
+    detection_latency: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -246,6 +260,45 @@ def _rate_at(pairs: tuple[tuple[int, BinomialStat], ...], k: int) -> float:
 
 
 @dataclasses.dataclass(frozen=True)
+class LatencyStat:
+    """Detection-latency summary over the streamed positive scenarios of
+    a campaign: ``detected`` counts finite latencies (failure flagged
+    while streaming) out of all streamed positives; ``mean``/``p95``
+    summarise the finite latencies (simulated seconds from earliest
+    failure onset to the first flagged streaming verdict; 0.0 when
+    nothing was detected)."""
+    detected: BinomialStat
+    mean: float
+    p95: float
+
+    @property
+    def n_measured(self) -> int:
+        return self.detected.trials
+
+    @property
+    def n_detected(self) -> int:
+        return self.detected.successes
+
+
+def detection_latency_stats(outcomes: list[ScenarioOutcome],
+                            detector: str | None = None) \
+        -> LatencyStat | None:
+    """Reduce streamed positives to a :class:`LatencyStat` for one
+    detector (``None`` → primary); ``None`` when no positive scenario
+    carries a latency measurement (non-streaming campaign)."""
+    lats = [o.result_for(detector).detection_latency
+            for o in outcomes if o.positive]
+    lats = [x for x in lats if x is not None]
+    if not lats:
+        return None
+    finite = [x for x in lats if math.isfinite(x)]
+    return LatencyStat(
+        detected=BinomialStat(len(finite), len(lats)),
+        mean=sum(finite) / len(finite) if finite else 0.0,
+        p95=_p95(finite))
+
+
+@dataclasses.dataclass(frozen=True)
 class CampaignMetrics:
     """Aggregate metrics over a set of scenario outcomes, for one
     detector."""
@@ -257,6 +310,9 @@ class CampaignMetrics:
     mean_compression: float
     mean_probe_overhead: float      # weighted by per-deployment scenarios
     mean_probe_overhead_unweighted: float   # plain mean over deployments
+    # detection-latency summary over streamed positives (None on
+    # non-streaming campaigns)
+    detection: LatencyStat | None = None
 
     def topk_rate(self, k: int) -> float:
         return _rate_at(self.topk, k)
@@ -359,6 +415,7 @@ def aggregate(outcomes: list[ScenarioOutcome],
         mean_compression=mean_comp,
         mean_probe_overhead=mean_ov,
         mean_probe_overhead_unweighted=mean_ov_unw,
+        detection=detection_latency_stats(outcomes, detector),
     )
 
 

@@ -19,6 +19,13 @@ Both paths produce the same merged (live + drained) pattern lists —
 bit-identical keys / counts / arrival order and float statistics to f32
 tolerance — and byte-identical compression accounting, so campaign
 compression ratios are comparable across impls.
+
+``record`` is the one-shot (post-hoc) driver; the always-on service in
+:mod:`repro.core.streaming` carries sketch state across repeated
+``observe(sim_chunk)`` calls and reuses the run builders here
+(:func:`comp_runs` / :func:`comm_runs`), so a chunked stream feeds the
+sketch the exact record sequence ``record`` would — streaming and
+post-hoc outputs are bit-identical per impl by construction.
 """
 
 from __future__ import annotations
@@ -62,6 +69,39 @@ class RecorderOutput:
     @property
     def compression_ratio(self) -> float:
         return self.raw_bytes / max(self.sketch_bytes, 1)
+
+
+def comp_runs(comp, instr_per_task: int):
+    """Computation trace rows → run-compressed sketch input
+    ``(keys, reps, durs, vals, t0s, dts)``.  Each task expands to
+    ``instr_per_task`` instruction records of equal duration; the run
+    algebra (``insert_run``) makes that expansion exact without
+    materialising it.  Shared by ``record`` and the streaming recorder so
+    chunked observation feeds byte-identical runs."""
+    keys = P.comp_pattern_keys(comp)
+    r = instr_per_task
+    durs = (comp["t_end"] - comp["t_start"]) / r
+    return (keys, np.full(len(keys), r), durs, comp["flops"] / r,
+            comp["t_start"], durs)
+
+
+def comm_runs(comm, packet_bytes: int, max_packets: int,
+              hop_latency: float):
+    """Communication trace rows → per-packet run-compressed sketch input
+    ``(keys, reps, durs, vals, t0s, dts)``.
+
+    Per-packet duration uses the queue-free service time: the min over
+    a pattern's packets estimates link bandwidth, not congestion (the
+    detector's EM needs the former; backpressure is a symptom).  Each
+    packet pays the full per-hop router latency (store-and-forward),
+    while the serialisation time divides across packets."""
+    keys = P.comm_pattern_keys(comm)
+    pk = np.clip(np.ceil(comm["bytes"] / packet_bytes).astype(np.int64),
+                 1, max_packets)
+    lat = comm["hops"] * hop_latency
+    per = np.maximum(comm["service"] - lat, 0.0) / pk + lat
+    wall = (comm["t_arrive"] - comm["t_depart"]) / pk
+    return keys, pk, per, comm["bytes"] / pk, comm["t_depart"], wall
 
 
 def _sketch_runs_ref(params: SketchParams, keys, reps, durs, vals, t0s,
@@ -137,13 +177,10 @@ def record(sim: SimResult, params: SketchParams,
     comp_bytes = params.total_bytes()
     n_comp_drained = 0
     if len(comp["core"]):
-        keys = P.comp_pattern_keys(comp)
-        r = instr_per_task
-        durs = (comp["t_end"] - comp["t_start"]) / r
+        runs = comp_runs(comp, instr_per_task)
         comp_patterns, comp_bytes, n_comp_drained = _sketch_runs(
-            impl, params, keys, np.full(len(keys), r), durs,
-            comp["flops"] / r, comp["t_start"], durs, P.COMP_KEY_TAG)
-        n_comp = len(keys) * r
+            impl, params, *runs, P.COMP_KEY_TAG)
+        n_comp = len(runs[0]) * instr_per_task
 
     comm = sim.comm
     n_comm = 0
@@ -151,21 +188,10 @@ def record(sim: SimResult, params: SketchParams,
     comm_bytes = comm_params.total_bytes()
     n_comm_drained = 0
     if len(comm["src"]):
-        keys = P.comm_pattern_keys(comm)
-        pk = np.clip(np.ceil(comm["bytes"] / packet_bytes).astype(np.int64),
-                     1, max_packets)
-        # per-packet duration uses the queue-free service time: the min over
-        # a pattern's packets estimates link bandwidth, not congestion (the
-        # detector's EM needs the former; backpressure is a symptom).  Each
-        # packet pays the full per-hop router latency (store-and-forward),
-        # while the serialisation time divides across packets.
-        lat = comm["hops"] * hop_latency
-        per = np.maximum(comm["service"] - lat, 0.0) / pk + lat
-        wall = (comm["t_arrive"] - comm["t_depart"]) / pk
+        runs = comm_runs(comm, packet_bytes, max_packets, hop_latency)
         comm_patterns, comm_bytes, n_comm_drained = _sketch_runs(
-            impl, comm_params, keys, pk, per, comm["bytes"] / pk,
-            comm["t_depart"], wall, P.COMM_KEY_TAG)
-        n_comm = int(pk.sum())
+            impl, comm_params, *runs, P.COMM_KEY_TAG)
+        n_comm = int(runs[1].sum())
 
     return RecorderOutput(
         comp_patterns=comp_patterns,

@@ -24,6 +24,14 @@ Two entry points:
 Verdicts are the unified :class:`~repro.core.detectors.Verdict` (re-exported
 here for compatibility): ranked candidates, mesh-aware ``matches`` and the
 recorder / FailRank / MCG artifacts.
+
+Both entry points also run *streaming*: ``Sloth.stream()`` returns an
+always-on :class:`~repro.core.streaming.SlothStream` (one incremental
+Verdict per observed chunk), and ``stream_analyse(sim, n_chunks)`` /
+``SlothDetector.stream_analyse`` replay a finished trace through it —
+the final streamed verdict equals post-hoc ``analyse`` exactly on both
+recorder impls, and the first flagged window's stream time feeds the
+campaign's detection-latency metric.
 """
 
 from __future__ import annotations
@@ -121,18 +129,32 @@ class Sloth:
 
     # -- analysis --------------------------------------------------------------
     def analyse(self, sim: SimResult) -> Verdict:
+        """Post-hoc analysis: record the whole trace, then trace it."""
         cfg = self.cfg
         rec = record(sim, cfg.sketch, instr_per_task=cfg.instr_per_task,
                      hop_latency=self.sim_cfg.hop_latency,
                      impl=cfg.recorder_impl)
+        return self.analyse_recorded(rec, sim.total_time)
+
+    def analyse_recorded(self, rec: RecorderOutput,
+                         total_time: float) -> Verdict:
+        """SL-Tracer over an already-compressed trace.
+
+        The detection half of :meth:`analyse`, split out so the
+        streaming service (:class:`~repro.core.streaming.SlothStream`)
+        can re-analyse a :class:`StreamingRecorder`'s cumulative output
+        per window without re-recording; ``total_time`` is the analysis
+        horizon (the trace's total time post-hoc, the stream's elapsed
+        clock mid-stream)."""
+        cfg = self.cfg
         core_z = cfg.effective_core_z(self.mesh.n_cores)
         link_ratio = cfg.effective_link_ratio(self.mesh.n_links)
-        core_cands = detect_cores(rec.comp_patterns, sim.total_time,
+        core_cands = detect_cores(rec.comp_patterns, total_time,
                                   cfg.n_windows, core_z)
-        link_inf = detect_links(rec.comm_patterns, self.mesh, sim.total_time,
+        link_inf = detect_links(rec.comm_patterns, self.mesh, total_time,
                                 cfg.n_windows, self.sim_cfg.hop_latency,
                                 link_ratio)
-        mcg = build_mcg(rec.comm_patterns, self.mesh, sim.total_time,
+        mcg = build_mcg(rec.comm_patterns, self.mesh, total_time,
                         core_cands, link_inf, cfg.n_windows)
         fr = failrank(mcg, cfg.failrank)
 
@@ -190,13 +212,41 @@ class Sloth:
             kind, loc, score = ranking[0]
         return Verdict(flagged=flagged, kind=kind, location=loc, score=score,
                        ranking=ranking, recorder=rec, failrank=fr, mcg=mcg,
-                       total_time=sim.total_time,
+                       total_time=total_time,
                        flagged_resources=tuple(flagged_res),
                        mesh=self.mesh, detector=self.name)
 
     def detect(self, failures: list[FailSlow] | None = None,
                seed: int = 0) -> Verdict:
         return self.analyse(self.run(failures=failures, seed=seed))
+
+    # -- streaming -----------------------------------------------------------
+    def stream(self):
+        """A fresh :class:`~repro.core.streaming.SlothStream` bound to
+        this pipeline (one incremental Verdict per observed chunk)."""
+        from .streaming import SlothStream
+        return SlothStream(self)
+
+    def stream_analyse(self, sim: SimResult, n_chunks: int = 4) \
+            -> tuple[Verdict, float | None]:
+        """Replay a finished trace through the streaming service.
+
+        Splits ``sim`` into ``n_chunks`` time-ordered chunks
+        (:func:`~repro.core.streaming.split_sim`), observes them in
+        order and returns ``(final verdict, first_flag_time)``.  The
+        last chunk is analysed at ``sim.total_time``, so the final
+        verdict equals post-hoc :meth:`analyse` of the same trace
+        exactly (same impl, same cumulative sketch state);
+        ``first_flag_time`` is the stream time of the earliest flagged
+        window (``None`` if no window flagged)."""
+        from .streaming import split_sim
+        st = self.stream()
+        chunks = split_sim(sim, n_chunks)
+        v = None
+        for i, chunk in enumerate(chunks):
+            horizon = sim.total_time if i == len(chunks) - 1 else None
+            v = st.observe(chunk, total_time=horizon)
+        return v, st.first_flag_time
 
 
 class SlothDetector:
@@ -222,6 +272,16 @@ class SlothDetector:
         if self.pipeline is None:
             raise RuntimeError("SlothDetector.analyse before prepare()")
         return self.pipeline.analyse(sim)
+
+    def stream_analyse(self, sim: SimResult, n_chunks: int = 4) \
+            -> tuple[Verdict, float | None]:
+        """Streaming protocol hook: detectors exposing this method are
+        driven chunk-by-chunk on the campaign's ``streaming=`` axis and
+        report detection latency (see ``campaign.run_scenario``)."""
+        if self.pipeline is None:
+            raise RuntimeError("SlothDetector.stream_analyse before "
+                               "prepare()")
+        return self.pipeline.stream_analyse(sim, n_chunks=n_chunks)
 
 
 _register_builtin("sloth", SlothDetector)

@@ -85,6 +85,20 @@ def _bulk_rows(merged: dict[int, Pattern], arr, pre: str, idx,
                                            tmin, tmax, arrival, mind))
 
 
+def drain_patterns(drain, key_tag: int = 0) -> list[Pattern]:
+    """Decode ONLY a drained-eviction buffer into (partial) Patterns,
+    merged per key, in eviction order.  The streaming recorder uses this
+    to fold each ``insert_runs`` call's evictions into a host-side
+    accumulator and then reuse a fresh drain buffer for the next chunk —
+    packed sketch state stays on device across ``observe()`` calls while
+    the drained stream grows off-chip, exactly like the deployment's
+    DRAM write stream."""
+    merged: dict[int, Pattern] = {}
+    _bulk_rows(merged, drain, "d_", np.arange(int(np.asarray(
+        drain["d_n"]))), key_tag)
+    return sorted(merged.values(), key=lambda p: p.arrival)
+
+
 def patterns(state, drain=None, key_tag: int = 0) -> list[Pattern]:
     """Decode Stage-2 (and, when given, the drained-eviction stream) into
     Pattern records, merged per key exactly like the numpy oracle's

@@ -1,8 +1,19 @@
 """Serving launcher: batched prefill+decode with SLOTH telemetry hooks.
 
+Decode percentiles come from the engine's dedicated ``decode_times``
+series — the old single ``step_times`` list interleaved every batch's
+prefill with its decode steps, and dropping only index 0 left later
+batches' (much slower) prefills inflating the "decode" p50/p99.
+
+``--telemetry`` taps the engine's per-step hook: decode step timings
+stream into the pod detector every window
+(:class:`~repro.distributed.telemetry.StepTelemetry`), and each
+window's verdict is printed live — a fail-slow host during decode
+surfaces as a flagged ``core 0`` verdict while serving continues.
+
 CPU example:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-      --requests 8 --max-new 8
+      --requests 8 --max-new 8 --telemetry
 """
 
 from __future__ import annotations
@@ -15,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import get_config
+from ..distributed.telemetry import PodTelemetryConfig, StepTelemetry
 from ..models import transformer as T
 from ..serving.engine import EngineConfig, Request, ServeEngine
 
@@ -29,14 +41,37 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="stream decode step timings into the pod "
+                         "detector (one verdict per window)")
+    ap.add_argument("--telemetry-window", type=int, default=8,
+                    help="decode steps per streaming-detector window")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = T.init_model(cfg, jax.random.PRNGKey(args.seed),
                           dtype=jnp.float32)
+
+    telemetry = hook = None
+    if args.telemetry:
+        telemetry = StepTelemetry(
+            PodTelemetryConfig(mesh_w=4, mesh_h=4,
+                               window_steps=args.telemetry_window),
+            n_shards=args.batch, warmup=1, seed=args.seed)
+
+        def hook(kind, dt):
+            if kind != "decode":    # prefills are not per-step samples
+                return
+            v = telemetry.record_step(dt)
+            if v is not None and v.flagged:
+                print(f"[telemetry] FLAGGED {v.kind} {v.location} "
+                      f"severity {v.severity:.1f} -> "
+                      f"{telemetry.plans[-1]['action']}")
+
     engine = ServeEngine(cfg, params,
                          EngineConfig(batch=args.batch,
-                                      cache_len=args.cache_len))
+                                      cache_len=args.cache_len),
+                         step_hook=hook)
     rng = np.random.default_rng(args.seed)
     enc_frames = None
     if cfg.enc_dec:
@@ -52,10 +87,18 @@ def main(argv=None):
     tok = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {tok} tokens, {wall:.1f}s "
           f"({tok / max(wall, 1e-9):.1f} tok/s)")
-    if len(engine.step_times) > 1:
-        print(f"p50 decode step {np.median(engine.step_times[1:]) * 1e3:.1f}"
-              f" ms, p99 {np.quantile(engine.step_times[1:], 0.99) * 1e3:.1f}"
+    if engine.prefill_times:
+        print(f"mean prefill {np.mean(engine.prefill_times) * 1e3:.1f} ms "
+              f"({len(engine.prefill_times)} batches)")
+    if engine.decode_times:
+        print(f"p50 decode step {np.median(engine.decode_times) * 1e3:.1f}"
+              f" ms, p99 {np.quantile(engine.decode_times, 0.99) * 1e3:.1f}"
               " ms")
+    if telemetry is not None:
+        telemetry.flush()
+        n_flagged = sum(v.flagged for v in telemetry.verdicts)
+        print(f"[telemetry] {len(telemetry.verdicts)} windows, "
+              f"{n_flagged} flagged")
     return done
 
 

@@ -5,13 +5,24 @@ Features exercised end-to-end (CPU-scale here, pod-scale by mesh swap):
   * periodic atomic checkpoints (params + optimizer + data state),
   * crash-resume: ``--resume`` restarts from the latest checkpoint,
   * elastic restart: resuming onto a different mesh re-shards arrays,
-  * SLOTH pod telemetry: per-step timing records stream into the pod
-    detector every ``telemetry_window`` steps; verdicts drive the
-    mitigation policy (logged; exclusion triggers a checkpoint+remesh).
+  * SLOTH pod telemetry (``--telemetry``): measured per-step wall times
+    stream into the pod detector every ``--telemetry-window`` steps
+    (:class:`~repro.distributed.telemetry.StepTelemetry`; the local host
+    is chip 0); each window's verdict and mitigation plan are logged,
+    and an ``exclude_and_restart`` plan triggers an immediate
+    checkpoint.  ``--inject-slow-at/--inject-slow-steps/
+    --inject-slow-factor`` scale the *reported* timings of a step range
+    (training itself is unperturbed) so the detection path is
+    demonstrable end-to-end; ``--expect-flagged`` turns "the injected
+    slowdown was flagged" into an exit-code assertion (the CI smoke).
 
 Usage (CPU example):
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
       --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+Telemetry smoke (flags an injected 10x slow window):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 24 --batch 2 --seq 32 --telemetry --telemetry-window 8 \
+      --inject-slow-at 10 --inject-slow-steps 6 --expect-flagged
 """
 
 from __future__ import annotations
@@ -27,8 +38,7 @@ import numpy as np
 from ..checkpoint import store
 from ..configs.base import get_config
 from ..data.pipeline import DataConfig, TokenPipeline
-from ..distributed.telemetry import (MitigationPolicy, PodDetector,
-                                     PodTelemetryConfig)
+from ..distributed.telemetry import PodTelemetryConfig, StepTelemetry
 from ..models import transformer as T
 from ..optim import adamw
 from . import steps as steps_mod
@@ -49,6 +59,19 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--telemetry", action="store_true",
                     help="run the SLOTH pod detector on step timings")
+    ap.add_argument("--telemetry-window", type=int, default=8,
+                    help="steps per streaming-detector window")
+    ap.add_argument("--inject-slow-at", type=int, default=None,
+                    metavar="STEP", help="scale the telemetry-reported "
+                    "timing of this step onward (detection demo; training "
+                    "itself is unperturbed)")
+    ap.add_argument("--inject-slow-steps", type=int, default=8,
+                    help="number of steps the injected slowdown lasts")
+    ap.add_argument("--inject-slow-factor", type=float, default=10.0,
+                    help="reported-timing multiplier for injected steps")
+    ap.add_argument("--expect-flagged", action="store_true",
+                    help="exit nonzero unless telemetry flagged a slow "
+                    "window (CI smoke assertion)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -79,11 +102,12 @@ def main(argv=None):
     train_step = jax.jit(steps_mod.make_train_step(cfg, plan, opt_cfg),
                          donate_argnums=(0, 1))
 
-    detector = policy = pod = None
+    telemetry = None
     if args.telemetry:
-        tele_cfg = PodTelemetryConfig(mesh_w=4, mesh_h=4)
-        detector = PodDetector(tele_cfg)
-        policy = MitigationPolicy(n_shards=4)
+        tele_cfg = PodTelemetryConfig(mesh_w=4, mesh_h=4,
+                                      window_steps=args.telemetry_window)
+        telemetry = StepTelemetry(tele_cfg, n_shards=4, warmup=1,
+                                  seed=args.seed)
 
     enc_frames = None
     if cfg.enc_dec:
@@ -104,6 +128,29 @@ def main(argv=None):
         loss = float(loss)
         losses.append(loss)
         dt = time.perf_counter() - t0
+        if telemetry is not None:
+            reported = dt
+            if args.inject_slow_at is not None and \
+                    args.inject_slow_at <= step \
+                    < args.inject_slow_at + args.inject_slow_steps:
+                reported *= args.inject_slow_factor
+            verdict = telemetry.record_step(reported)
+            if verdict is not None:
+                plan = telemetry.plans[-1]
+                if verdict.flagged:
+                    print(f"[telemetry] step {step}: FLAGGED "
+                          f"{verdict.kind} {verdict.location} "
+                          f"severity {verdict.severity:.1f} -> "
+                          f"{plan['action']}")
+                    if plan["action"] == "exclude_and_restart" \
+                            and args.ckpt_dir:
+                        path = store.save(args.ckpt_dir, step + 1,
+                                          (params, opt_state),
+                                          extra={"data": pipe.state(),
+                                                 "loss": loss})
+                        print(f"[telemetry] mitigation checkpoint {path}")
+                else:
+                    print(f"[telemetry] step {step}: healthy window")
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d} loss {loss:.4f} gnorm {float(gnorm):.3f}"
                   f" {dt*1e3:.0f} ms")
@@ -114,6 +161,15 @@ def main(argv=None):
                                      "loss": loss})
             print(f"[ckpt] {path}")
     wall = time.perf_counter() - t_begin
+    if telemetry is not None:
+        telemetry.flush()      # analyse any trailing partial window
+        n_flagged = sum(v.flagged for v in telemetry.verdicts)
+        print(f"[telemetry] {len(telemetry.verdicts)} windows, "
+              f"{n_flagged} flagged")
+        if args.expect_flagged and not telemetry.flagged:
+            raise SystemExit(
+                "telemetry smoke FAILED: no window flagged the injected "
+                "slowdown")
     if losses:
         print(f"done: {args.steps - start_step} steps in {wall:.1f}s; "
               f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")

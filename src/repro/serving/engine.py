@@ -2,8 +2,17 @@
 
 Single-host reference implementation of the serve path the dry-run lowers
 at pod scale: uniform-batch prefill, greedy decode with the rolling KV /
-SSM cache, simple admission queue.  Per-step timing hooks feed the pod
-telemetry detector (straggler-aware serving).
+SSM cache, simple admission queue.
+
+Per-step timings are recorded in **separate** ``prefill_times`` /
+``decode_times`` series (the legacy interleaved ``step_times`` list is
+kept for compatibility): prefill steps are O(prompt·seq) and decode
+steps O(1)-ish, so mixing them in one series inflated every decode
+percentile computed downstream.  An optional ``step_hook(kind, dt)``
+callback fires after each step (``kind`` is ``'prefill'`` or
+``'decode'``) — the live telemetry tap ``launch/serve.py --telemetry``
+uses to stream decode timings into the pod detector
+(:class:`~repro.distributed.telemetry.StepTelemetry`).
 """
 
 from __future__ import annotations
@@ -34,12 +43,15 @@ class EngineConfig:
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, ecfg: EngineConfig):
+    def __init__(self, cfg, params, ecfg: EngineConfig, step_hook=None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.queue: list[Request] = []
-        self.step_times: list[float] = []
+        self.step_times: list[float] = []      # legacy interleaved series
+        self.prefill_times: list[float] = []
+        self.decode_times: list[float] = []
+        self.step_hook = step_hook             # fn(kind, dt) | None
 
         self._prefill = jax.jit(
             lambda p, toks, frames=None: T.prefill(
@@ -53,6 +65,13 @@ class ServeEngine:
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def _record(self, kind: str, dt: float) -> None:
+        self.step_times.append(dt)
+        (self.prefill_times if kind == "prefill"
+         else self.decode_times).append(dt)
+        if self.step_hook is not None:
+            self.step_hook(kind, dt)
 
     def _next_batch(self) -> list[Request]:
         batch = self.queue[:self.ecfg.batch]
@@ -77,7 +96,7 @@ class ServeEngine:
             last, cache = out[0], out[1]
             memory = out[2] if self.cfg.enc_dec else None
             nxt = jnp.argmax(last[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            self.step_times.append(time.perf_counter() - t0)
+            self._record("prefill", time.perf_counter() - t0)
             max_new = max(r.max_new for r in batch)
             for k in range(max_new):
                 for r, t in zip(batch, np.asarray(nxt)[:, 0]):
@@ -88,6 +107,6 @@ class ServeEngine:
                                              jnp.int32(s + k), memory)
                 nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]\
                     .astype(jnp.int32)
-                self.step_times.append(time.perf_counter() - t0)
+                self._record("decode", time.perf_counter() - t0)
             done.extend(r for r in batch if r.rid >= 0)
         return done
