@@ -1,0 +1,72 @@
+"""Static verification of the repo's deployment and determinism claims.
+
+Three execution-free passes, one CLI (``python -m repro.analysis
+--check all [--json]``; exit 0 iff no findings):
+
+* :mod:`.memory_model` — closed-form per-chip footprint of the recorder
+  (Stage-1 tables, Stage-2 slots, drain buffer, packed/Pallas layouts)
+  checked against ``budget_kb``; also the construction-time guards
+  ``validate_config`` / ``validate_params`` wired into ``Sloth`` and
+  ``StreamingRecorder``.
+* :mod:`.kernel_audit` — AST audit of every ``kernels/*/kernel.py``:
+  AUDIT contracts, BlockSpec index-map bounds vs the grid, grid-carried
+  write races on aliased refs, dtype-narrowing hazards.
+* :mod:`.lints` — determinism lints over ``core/``/``kernels/``:
+  unseeded RNG, wall-clock reads, unregistered detector classes,
+  order-sensitive set iteration.
+
+Each pass exposes ``check() -> list[Finding]`` and a ``self_test()``
+that plants synthetic violations and asserts they are caught (run via
+``python -m repro.analysis --self-test``; also covered by
+``tests/test_analysis.py``).
+"""
+
+from .memory_model import (DEFAULT_BUDGET_KB,  # noqa: F401
+                           MemoryBudgetError, memory_report,
+                           validate_config, validate_params)
+from .report import Finding, findings_to_json, render_findings  # noqa: F401
+
+__all__ = [
+    "DEFAULT_BUDGET_KB", "MemoryBudgetError", "memory_report",
+    "validate_config", "validate_params", "Finding",
+    "findings_to_json", "render_findings", "run_checks", "CHECKS",
+]
+
+#: Check name → module path; ``--check all`` runs them in this order.
+CHECKS = ("memory", "kernels", "lints")
+
+
+def _pass_module(name: str):
+    if name == "memory":
+        from . import memory_model
+        return memory_model
+    if name == "kernels":
+        from . import kernel_audit
+        return kernel_audit
+    if name == "lints":
+        from . import lints
+        return lints
+    raise ValueError(f"unknown check {name!r}; options: "
+                     f"{CHECKS + ('all',)}")
+
+
+def run_checks(which: str = "all", root=None,
+               budget_kb: float | None = None) -> list[Finding]:
+    """Run one pass (or all) and return the combined findings."""
+    names = CHECKS if which == "all" else (which,)
+    findings: list[Finding] = []
+    for name in names:
+        mod = _pass_module(name)
+        if name == "memory":
+            findings.extend(mod.check(root, budget_kb=budget_kb))
+        else:
+            findings.extend(mod.check(root))
+    return findings
+
+
+def run_self_tests(which: str = "all") -> None:
+    """Run each pass's planted-violation self-test (raises
+    AssertionError on the first failure)."""
+    names = CHECKS if which == "all" else (which,)
+    for name in names:
+        _pass_module(name).self_test()

@@ -1,0 +1,60 @@
+"""CLI for the static-analysis passes.
+
+Usage::
+
+    python -m repro.analysis --check all            # human-readable
+    python -m repro.analysis --check memory --json  # machine-readable
+    python -m repro.analysis --self-test            # planted violations
+
+Exit status: 0 iff the selected checks produced no findings (and, with
+``--self-test``, every planted synthetic violation was caught).  CI
+runs ``--check all`` and ``--self-test`` as the ``static-analysis``
+job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import (CHECKS, findings_to_json, render_findings, run_checks,
+               run_self_tests)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verification: memory budget, Pallas kernel "
+                    "safety, determinism invariants.")
+    ap.add_argument("--check", default="all",
+                    choices=("all",) + CHECKS,
+                    help="which pass to run (default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--budget-kb", type=float, default=None,
+                    help="override the memory pass's per-chip budget "
+                         "(KiB; default: each config's own budget_kb)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run each pass's planted-violation self-test "
+                         "instead of checking the tree")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        try:
+            run_self_tests(args.check)
+        except AssertionError as e:
+            print(f"self-test FAILED: {e}", file=sys.stderr)
+            return 1
+        print(f"self-test OK ({args.check})")
+        return 0
+
+    findings = run_checks(args.check, budget_kb=args.budget_kb)
+    if args.json:
+        print(findings_to_json(findings, extra={"check": args.check}))
+    else:
+        print(render_findings(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

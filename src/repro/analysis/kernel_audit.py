@@ -1,0 +1,437 @@
+"""Structural (AST) auditor for the Pallas kernels.
+
+Walks every ``kernels/*/kernel.py`` without importing or tracing it and
+checks the properties that have actually bitten this repo's kernel work
+(grid/BlockSpec mismatches fail silently under ``interpret=True`` on
+CPU and only explode — or worse, corrupt state — on real hardware):
+
+* **audit contract** — each kernel module must declare a module-level
+  ``AUDIT = {"grid_rank": int, "aliased_io": bool,
+  "sequential_grid": bool}`` stating its intended shape; the auditor
+  cross-checks the declaration against the code, so a refactor that
+  changes the grid or aliasing without updating the contract is caught
+  (``missing-audit-contract`` / ``audit-grid-rank-mismatch`` /
+  ``audit-alias-mismatch`` / ``audit-semantics-mismatch``).
+* **index-map bounds vs the grid** — every ``pl.BlockSpec`` index map
+  must take exactly one argument per grid axis (``index-map-arity``),
+  return one block coordinate per block-shape dimension
+  (``index-map-rank``), and not offset a grid variable by a nonzero
+  constant (``index-map-offset`` — ``lambda i: (i + 1,)`` reads one
+  block past the end of the array on the last grid step).
+* **grid-carried write races** — if any grid axis is marked
+  ``"parallel"`` in ``dimension_semantics``, an output BlockSpec whose
+  index map ignores that axis writes the same block from concurrent
+  grid steps, and aliased input/output refs carry state that a parallel
+  axis would tear (``parallel-write-race``).  The sketch kernel's
+  correctness depends on the *sequential* grid preserving Algorithm 1's
+  insertion order — this rule is what stops someone "optimising" it
+  with a parallel grid annotation.
+* **dtype-narrowing hazards** — ``dot_general`` without
+  ``preferred_element_type`` accumulates in the input dtype on TPU
+  (``dot-missing-preferred-type``), and explicit casts to
+  ``bfloat16``/``float16`` (``narrow-float-cast``) silently diverge
+  from the f32 numpy oracle, breaking ref/batched parity.
+
+Everything here is pure ``ast`` — no JAX import, safe in any CI
+container.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .report import Finding
+
+#: Required keys (and value types) of a kernel module's AUDIT contract.
+AUDIT_KEYS = {"grid_rank": int, "aliased_io": bool,
+              "sequential_grid": bool}
+
+_NARROW_DTYPES = {"bfloat16", "float16"}
+
+
+def _kernel_files(root: Path | None) -> list[Path]:
+    if root is None:
+        root = Path(__file__).resolve().parents[1]   # the repro package
+    else:
+        root = Path(root)
+        for sub in ("src/repro", "repro"):
+            if (root / sub / "kernels").is_dir():
+                root = root / sub
+                break
+    return sorted(root.glob("kernels/*/kernel.py"))
+
+
+def _rel(path: Path) -> str:
+    s = str(path)
+    marker = "src/repro/"
+    i = s.find(marker)
+    return s[i:] if i >= 0 else s
+
+
+class _Scope:
+    """Simple ``name → value-node`` map of one function (or module)
+    body's single-target assignments, for resolving grids and spec
+    lists referenced by name."""
+
+    def __init__(self, body: list[ast.stmt]):
+        self.assigns: dict[str, ast.expr] = {}
+        for stmt in body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                self.assigns[stmt.targets[0].id] = stmt.value
+
+    def resolve(self, node: ast.expr, depth: int = 4) -> ast.expr:
+        while isinstance(node, ast.Name) and depth > 0:
+            nxt = self.assigns.get(node.id)
+            if nxt is None:
+                return node
+            node, depth = nxt, depth - 1
+        return node
+
+
+def _is_call_to(node: ast.expr, name: str) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == name) or \
+        (isinstance(f, ast.Name) and f.id == name)
+
+
+def _kwarg(call: ast.Call, name: str) -> ast.expr | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _find_dimension_semantics(call: ast.Call) -> tuple[list[str],
+                                                       int] | None:
+    """``dimension_semantics`` anywhere in the pallas_call's keyword
+    subtree (direct kwarg or nested in ``compiler_params=...``);
+    returns (axis kinds, line) if every entry is a string literal."""
+    for node in ast.walk(call):
+        if isinstance(node, ast.keyword) and \
+                node.arg == "dimension_semantics":
+            v = node.value
+            if isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value,
+                                                               str)
+                    for e in v.elts):
+                return ([e.value for e in v.elts], v.lineno)
+    return None
+
+
+def _lambda_param_names(lam: ast.Lambda) -> list[str]:
+    return [a.arg for a in lam.args.args]
+
+
+def _names_in(node: ast.expr) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _block_specs_in(tree: ast.AST) -> list[ast.Call]:
+    return [n for n in ast.walk(tree) if _is_call_to(n, "BlockSpec")]
+
+
+def _spec_parts(call: ast.Call) -> tuple[ast.expr | None,
+                                         ast.Lambda | None]:
+    """(block-shape node, index-map lambda) of one BlockSpec call."""
+    shape = call.args[0] if call.args else _kwarg(call, "block_shape")
+    imap = call.args[1] if len(call.args) > 1 else _kwarg(call,
+                                                          "index_map")
+    return shape, imap if isinstance(imap, ast.Lambda) else None
+
+
+def _resolve_spec_list(node: ast.expr, scope: _Scope) \
+        -> list[ast.Call] | None:
+    """Best-effort resolution of an ``out_specs`` expression to its
+    BlockSpec call nodes; ``None`` when anything is opaque (computed
+    lists, multiplied names) — callers must then skip spec-level rules
+    rather than guess."""
+    node = scope.resolve(node)
+    if _is_call_to(node, "BlockSpec"):
+        return [node]
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out: list[ast.Call] = []
+        for e in node.elts:
+            sub = _resolve_spec_list(e, scope)
+            if sub is None:
+                return None
+            out.extend(sub)
+        return out
+    return None
+
+
+def _audit_contract(tree: ast.Module, path: str,
+                    findings: list[Finding]) -> dict | None:
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id == "AUDIT":
+            try:
+                audit = ast.literal_eval(stmt.value)
+            except (ValueError, SyntaxError):
+                findings.append(Finding(
+                    "kernels", "missing-audit-contract", path,
+                    stmt.lineno,
+                    "AUDIT must be a literal dict"))
+                return None
+            bad = [k for k, t in AUDIT_KEYS.items()
+                   if not isinstance(audit.get(k), t)]
+            if bad:
+                findings.append(Finding(
+                    "kernels", "missing-audit-contract", path,
+                    stmt.lineno,
+                    f"AUDIT missing/ill-typed keys: {bad} "
+                    f"(need {sorted(AUDIT_KEYS)})"))
+                return None
+            return audit
+    findings.append(Finding(
+        "kernels", "missing-audit-contract", path, 1,
+        "kernel module declares no AUDIT contract "
+        "(AUDIT = {'grid_rank': ..., 'aliased_io': ..., "
+        "'sequential_grid': ...})"))
+    return None
+
+
+def _audit_call(call: ast.Call, scope: _Scope, audit: dict | None,
+                path: str, findings: list[Finding]) -> int | None:
+    """Audit one ``pl.pallas_call``; returns the resolved grid rank."""
+    grid_node = _kwarg(call, "grid")
+    grid_rank = None
+    if grid_node is not None:
+        g = scope.resolve(grid_node)
+        if isinstance(g, (ast.Tuple, ast.List)):
+            grid_rank = len(g.elts)
+    if audit is not None and grid_rank is not None \
+            and audit["grid_rank"] != grid_rank:
+        findings.append(Finding(
+            "kernels", "audit-grid-rank-mismatch", path, call.lineno,
+            f"AUDIT declares grid_rank={audit['grid_rank']} but "
+            f"pallas_call uses a rank-{grid_rank} grid"))
+
+    aliases = _kwarg(call, "input_output_aliases")
+    aliased = aliases is not None and not (
+        isinstance(aliases, ast.Dict) and not aliases.keys)
+    if audit is not None and audit["aliased_io"] != aliased:
+        findings.append(Finding(
+            "kernels", "audit-alias-mismatch", path, call.lineno,
+            f"AUDIT declares aliased_io={audit['aliased_io']} but "
+            f"pallas_call {'uses' if aliased else 'does not use'} "
+            f"input_output_aliases"))
+
+    sem = _find_dimension_semantics(call)
+    par_axes = [i for i, kind in enumerate(sem[0])
+                if kind == "parallel"] if sem else []
+    if audit is not None and audit["sequential_grid"] and par_axes:
+        findings.append(Finding(
+            "kernels", "audit-semantics-mismatch", path, sem[1],
+            f"AUDIT declares sequential_grid=True but "
+            f"dimension_semantics marks axes {par_axes} parallel"))
+
+    if par_axes and aliased:
+        findings.append(Finding(
+            "kernels", "parallel-write-race", path, call.lineno,
+            f"input_output_aliases carries state across the grid, but "
+            f"axes {par_axes} are marked parallel — concurrent grid "
+            f"steps would tear the aliased refs"))
+
+    if par_axes:
+        out_node = _kwarg(call, "out_specs")
+        out_specs = _resolve_spec_list(out_node, scope) \
+            if out_node is not None else None
+        for spec in out_specs or []:
+            _, imap = _spec_parts(spec)
+            if imap is None:
+                continue
+            params = _lambda_param_names(imap)
+            used = _names_in(imap.body)
+            for ax in par_axes:
+                if ax < len(params) and params[ax] not in used:
+                    findings.append(Finding(
+                        "kernels", "parallel-write-race", path,
+                        imap.lineno,
+                        f"output index map ignores parallel grid axis "
+                        f"{ax} ({params[ax]!r}) — concurrent steps "
+                        f"write the same output block"))
+    return grid_rank
+
+
+def _audit_specs_list(specs: list[ast.Call], grid_ranks: set[int],
+                      path: str, findings: list[Finding]) -> None:
+    for spec in specs:
+        shape, imap = _spec_parts(spec)
+        if imap is None:
+            continue
+        params = _lambda_param_names(imap)
+        if grid_ranks and len(params) not in grid_ranks:
+            findings.append(Finding(
+                "kernels", "index-map-arity", path, imap.lineno,
+                f"index map takes {len(params)} args but the grid has "
+                f"rank {sorted(grid_ranks)} — one arg per grid axis"))
+        body = imap.body
+        ret = body.elts if isinstance(body, ast.Tuple) else [body]
+        if isinstance(shape, (ast.Tuple, ast.List)) \
+                and len(shape.elts) != len(ret):
+            findings.append(Finding(
+                "kernels", "index-map-rank", path, imap.lineno,
+                f"block shape has {len(shape.elts)} dims but the index "
+                f"map returns {len(ret)} coordinates"))
+        pset = set(params)
+        for el in ret:
+            if isinstance(el, ast.BinOp) and \
+                    isinstance(el.op, (ast.Add, ast.Sub)):
+                sides = [el.left, el.right]
+                has_param = any(isinstance(s, ast.Name)
+                                and s.id in pset for s in sides)
+                const = next((s.value for s in sides
+                              if isinstance(s, ast.Constant)
+                              and isinstance(s.value, int)), None)
+                if has_param and const:
+                    findings.append(Finding(
+                        "kernels", "index-map-offset", path, el.lineno,
+                        f"index map offsets a grid variable by "
+                        f"{const:+d} — the last grid step indexes a "
+                        f"block outside the array"))
+
+
+def _audit_dtypes(tree: ast.Module, path: str,
+                  findings: list[Finding]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("dot_general", "dot"):
+            if _kwarg(node, "preferred_element_type") is None:
+                findings.append(Finding(
+                    "kernels", "dot-missing-preferred-type", path,
+                    node.lineno,
+                    f"{node.func.attr} without preferred_element_type "
+                    f"accumulates in the input dtype on TPU — pass "
+                    f"preferred_element_type=jnp.float32 to keep "
+                    f"ref/batched parity"))
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "astype" and node.args:
+            tgt = node.args[0]
+            if isinstance(tgt, ast.Attribute) \
+                    and tgt.attr in _NARROW_DTYPES:
+                findings.append(Finding(
+                    "kernels", "narrow-float-cast", path, node.lineno,
+                    f"explicit cast to {tgt.attr} narrows below the "
+                    f"f32 the numpy oracle computes in — a silent "
+                    f"parity hazard"))
+
+
+def audit_source(source: str, path: str) -> list[Finding]:
+    """Audit one kernel module's source text (the unit the self-test
+    drives with synthetic violations)."""
+    findings: list[Finding] = []
+    tree = ast.parse(source)
+    audit = _audit_contract(tree, path, findings)
+
+    # innermost-scope assignment: function scopes are walked first (in
+    # increasing depth order functions nest, so later entries are
+    # inner), and a call/spec already claimed by an inner scope is not
+    # re-audited by an outer one.
+    fn_scopes = [n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef))]
+    scopes: list[tuple[ast.AST, list[ast.stmt]]] = \
+        [(n, n.body) for n in reversed(fn_scopes)] + [(tree, tree.body)]
+    claimed: set[int] = set()
+    for scope_tree, body in scopes:
+        calls = [n for n in ast.walk(scope_tree)
+                 if _is_call_to(n, "pallas_call")
+                 and id(n) not in claimed]
+        if not calls:
+            continue
+        scope = _Scope(body)
+        ranks: set[int] = set()
+        for call in calls:
+            claimed.add(id(call))
+            r = _audit_call(call, scope, audit, path, findings)
+            if r is not None:
+                ranks.add(r)
+        specs = [s for s in _block_specs_in(scope_tree)
+                 if id(s) not in claimed]
+        claimed.update(id(s) for s in specs)
+        _audit_specs_list(specs, ranks, path, findings)
+    # module-wide dtype rules
+    _audit_dtypes(tree, path, findings)
+    return _dedupe(findings)
+
+
+def _dedupe(findings: list[Finding]) -> list[Finding]:
+    seen: set[tuple] = set()
+    out = []
+    for f in findings:
+        k = (f.rule, f.path, f.line, f.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+def check(root=None) -> list[Finding]:
+    """Audit every ``kernels/*/kernel.py`` under ``root`` (default: the
+    installed ``repro`` package)."""
+    findings: list[Finding] = []
+    files = _kernel_files(Path(root) if root else None)
+    if not files:
+        findings.append(Finding(
+            "kernels", "no-kernels-found", str(root or "<package>"), 0,
+            "found no kernels/*/kernel.py to audit"))
+        return findings
+    for f in files:
+        findings.extend(audit_source(f.read_text(), _rel(f)))
+    return findings
+
+
+# One synthetic kernel tripping every rule at least once; the self-test
+# asserts each rule fires on it and none fires on the real tree.
+_SYNTHETIC_BAD = '''
+AUDIT = {"grid_rank": 2, "aliased_io": False, "sequential_grid": True}
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bad(x):
+    def _k(x_ref, o_ref):
+        o_ref[:] = jax.lax.dot_general(
+            x_ref[:], x_ref[:], (((1,), (0,)), ((), ())))
+        o_ref[:] = o_ref[:].astype(jnp.bfloat16)
+
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i + 1,))],
+        out_specs=[pl.BlockSpec((8,), lambda i: (0,))],
+        dimension_semantics=("parallel",),
+        input_output_aliases={0: 0},
+    )(x)
+'''
+
+_SYNTHETIC_RULES = (
+    "audit-grid-rank-mismatch", "audit-alias-mismatch",
+    "audit-semantics-mismatch", "index-map-arity", "index-map-rank",
+    "index-map-offset", "parallel-write-race",
+    "dot-missing-preferred-type", "narrow-float-cast",
+)
+
+
+def self_test() -> None:
+    """Plant synthetic violations and assert every rule catches its
+    own; the real tree must stay clean."""
+    clean = check()
+    assert clean == [], \
+        "clean-tree kernel findings:\n" + "\n".join(
+            f.render() for f in clean)
+    bad = audit_source(_SYNTHETIC_BAD, "<synthetic>")
+    got = {f.rule for f in bad}
+    missing = [r for r in _SYNTHETIC_RULES if r not in got]
+    assert not missing, f"rules not triggered by synthetic: {missing}"
+    nocontract = audit_source("import jax\n", "<synthetic>")
+    assert any(f.rule == "missing-audit-contract" for f in nocontract),\
+        "missing AUDIT contract not flagged"

@@ -1,0 +1,477 @@
+"""AST lints encoding the ROADMAP's standing determinism invariants.
+
+The campaign's bit-identity contract (serial == thread == process, and
+seed → scenario derivation) survives only if nothing inside the core
+pipeline consults ambient nondeterminism.  These lints make the
+contract machine-checked over ``core/`` and ``kernels/`` (detector
+registration also covers ``distributed/``):
+
+* ``unseeded-rng`` — module-level ``np.random.*`` calls (the legacy
+  global generator), zero-argument ``np.random.default_rng()``, and
+  stdlib ``random.*`` calls.  All randomness must flow from an
+  explicitly seeded ``Generator``.
+* ``wallclock`` — ``time.time/perf_counter/monotonic/process_time``
+  and ``datetime.now/utcnow``: wall-clock reads inside the pipeline
+  make outputs run-dependent.  Telemetry that *reports* wall time (and
+  never feeds results) is allowlisted with a ``# lint: allow-wallclock``
+  marker on the offending line — ``campaign._wall_clock`` is the one
+  blessed reader.
+* ``unregistered-detector`` — a public detector-shaped class (a ``name``
+  string attribute plus both ``prepare`` and ``analyse`` methods) that
+  never reaches ``register_detector`` / ``_register_builtin`` grows a
+  side API the campaign can't see; the resolver follows both direct
+  registration calls and the ``ALL_BASELINES``-style pattern (a module
+  list of classes swept by a ``for`` loop that registers each).
+* ``set-iteration`` — materialising a ``set`` in an order-sensitive
+  position (``list()``/``tuple()``/``enumerate()``, a ``for`` loop, or
+  a list/generator comprehension).  Python set order varies with hash
+  seeding across processes, so any ranking or aggregation fed this way
+  breaks process-pool bit-identity; wrap in ``sorted()`` (or reduce
+  with an order-free ``min``/``max``/``sum``/``len``/``any``/``all``)
+  instead.  Dict iteration is insertion-ordered and deterministic, so
+  it is not flagged.
+
+Any line can carry ``# lint: allow-<rule>`` to record a reviewed,
+deliberate exception (see ROADMAP "Machine-enforced invariants").
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from .report import Finding
+
+#: Directories (relative to the repro package) each lint sweeps.
+RNG_SCOPE = ("core", "kernels")
+WALLCLOCK_SCOPE = ("core", "kernels")
+DETECTOR_SCOPE = ("core", "distributed")
+SET_SCOPE = ("core", "kernels")
+
+_WALLCLOCK_TIME_FNS = {"time", "perf_counter", "monotonic",
+                       "process_time"}
+_WALLCLOCK_DT_FNS = {"now", "utcnow", "today"}
+_LEGACY_NP_RANDOM_OK = {"Generator", "default_rng", "SeedSequence",
+                        "PCG64", "Philox", "BitGenerator"}
+_REGISTER_FNS = {"register_detector", "_register_builtin"}
+_ORDER_FREE = {"sorted", "min", "max", "sum", "len", "any", "all",
+               "set", "frozenset"}
+_ORDERED_CONSUMERS = {"list", "tuple", "enumerate"}
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow-([a-z-]+)")
+
+
+def _package_root(root) -> Path:
+    if root is None:
+        return Path(__file__).resolve().parents[1]
+    root = Path(root)
+    for sub in ("src/repro", "repro"):
+        if (root / sub).is_dir():
+            return root / sub
+    return root
+
+
+def _rel(path: Path) -> str:
+    s = str(path)
+    i = s.find("src/repro/")
+    return s[i:] if i >= 0 else s
+
+
+def _files(pkg: Path, scopes: tuple[str, ...]) -> list[Path]:
+    out: list[Path] = []
+    for scope in scopes:
+        d = pkg / scope
+        if d.is_dir():
+            out.extend(sorted(d.rglob("*.py")))
+    return out
+
+
+def _allowed_lines(source: str) -> dict[int, set[str]]:
+    """Line → set of rules allowlisted by ``# lint: allow-<rule>``."""
+    allowed: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        for m in _ALLOW_RE.finditer(line):
+            allowed.setdefault(i, set()).add(m.group(1))
+    return allowed
+
+
+def _suppressed(allowed: dict[int, set[str]], line: int,
+                rule: str) -> bool:
+    return rule in allowed.get(line, ())
+
+
+def _dotted(node: ast.expr) -> str | None:
+    """``a.b.c`` attribute chains → "a.b.c" (None for anything else)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _imported_names(tree: ast.Module) -> dict[str, str]:
+    """Local alias → imported module/name ("np" → "numpy")."""
+    imp: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imp[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                imp[a.asname or a.name] = f"{node.module}.{a.name}"
+    return imp
+
+
+# -- rule: unseeded-rng ------------------------------------------------------
+
+def _lint_rng(tree: ast.Module, source: str, path: str) \
+        -> list[Finding]:
+    findings: list[Finding] = []
+    allowed = _allowed_lines(source)
+    imports = _imported_names(tree)
+    np_aliases = {a for a, mod in imports.items() if mod == "numpy"}
+    random_aliases = {a for a, mod in imports.items() if mod == "random"}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted is None:
+            continue
+        head, _, rest = dotted.partition(".")
+        hit = None
+        if head in np_aliases and rest.startswith("random."):
+            fn = rest.split(".", 1)[1]
+            if fn == "default_rng":
+                if not node.args and not node.keywords:
+                    hit = (f"{dotted}() without a seed draws OS "
+                           f"entropy")
+            elif fn not in _LEGACY_NP_RANDOM_OK:
+                hit = (f"{dotted} uses the unseeded global numpy "
+                       f"generator")
+        elif head in random_aliases and rest:
+            if rest != "Random" and not rest.startswith("Random."):
+                hit = f"{dotted} uses the unseeded stdlib generator"
+        if hit and not _suppressed(allowed, node.lineno, "rng"):
+            findings.append(Finding(
+                "lints", "unseeded-rng", path, node.lineno,
+                hit + " — derive from a seeded np.random.Generator"))
+    return findings
+
+
+# -- rule: wallclock ---------------------------------------------------------
+
+def _lint_wallclock(tree: ast.Module, source: str, path: str) \
+        -> list[Finding]:
+    findings: list[Finding] = []
+    allowed = _allowed_lines(source)
+    imports = _imported_names(tree)
+    time_aliases = {a for a, mod in imports.items() if mod == "time"}
+    dt_aliases = {a for a, mod in imports.items()
+                  if mod in ("datetime", "datetime.datetime")}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted is None or "." not in dotted:
+            continue
+        head, _, rest = dotted.partition(".")
+        fn = rest.split(".")[-1]
+        hit = (head in time_aliases and fn in _WALLCLOCK_TIME_FNS) or \
+            (head in dt_aliases and fn in _WALLCLOCK_DT_FNS)
+        if hit and not _suppressed(allowed, node.lineno, "wallclock"):
+            findings.append(Finding(
+                "lints", "wallclock", path, node.lineno,
+                f"{dotted}() reads the wall clock inside the pipeline "
+                f"— outputs become run-dependent; telemetry-only "
+                f"readers get '# lint: allow-wallclock'"))
+    return findings
+
+
+# -- rule: unregistered-detector ---------------------------------------------
+
+def _detector_classes(tree: ast.Module) -> list[ast.ClassDef]:
+    """Public classes with a string ``name`` attribute and both
+    ``prepare`` and ``analyse`` methods — the duck type
+    ``core.detectors`` registers."""
+    out = []
+    for node in tree.body:
+        if not isinstance(node, ast.ClassDef) or \
+                node.name.startswith("_"):
+            continue
+        has_name = any(
+            isinstance(s, ast.Assign) and len(s.targets) == 1
+            and isinstance(s.targets[0], ast.Name)
+            and s.targets[0].id == "name"
+            and isinstance(s.value, ast.Constant)
+            and isinstance(s.value.value, str)
+            for s in node.body)
+        methods = {s.name for s in node.body
+                   if isinstance(s, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))}
+        if has_name and {"prepare", "analyse"} <= methods:
+            out.append(node)
+    return out
+
+
+def _registered_names(tree: ast.Module) -> set[str]:
+    """Names that reach a registration call: direct arguments, plus
+    names inside list/tuple literals that a ``for`` loop sweeps into a
+    registration call (the ``ALL_BASELINES`` pattern)."""
+    module_lists: dict[str, list[str]] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and isinstance(stmt.value, (ast.List, ast.Tuple)):
+            module_lists[stmt.targets[0].id] = [
+                e.id for e in stmt.value.elts
+                if isinstance(e, ast.Name)]
+
+    registered: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fname = node.func.attr \
+                if isinstance(node.func, ast.Attribute) else (
+                    node.func.id if isinstance(node.func, ast.Name)
+                    else None)
+            if fname in _REGISTER_FNS:
+                for arg in list(node.args) + \
+                        [kw.value for kw in node.keywords]:
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Name):
+                            registered.add(sub.id)
+        if isinstance(node, ast.For):
+            body_regs = any(
+                isinstance(c, ast.Call) and (
+                    (isinstance(c.func, ast.Attribute)
+                     and c.func.attr in _REGISTER_FNS)
+                    or (isinstance(c.func, ast.Name)
+                        and c.func.id in _REGISTER_FNS))
+                for b in node.body for c in ast.walk(b))
+            if not body_regs:
+                continue
+            it = node.iter
+            if isinstance(it, ast.Name) and it.id in module_lists:
+                registered.update(module_lists[it.id])
+            elif isinstance(it, (ast.List, ast.Tuple)):
+                registered.update(e.id for e in it.elts
+                                  if isinstance(e, ast.Name))
+    return registered
+
+
+def _lint_detectors(tree: ast.Module, source: str, path: str) \
+        -> list[Finding]:
+    classes = _detector_classes(tree)
+    if not classes:
+        return []
+    registered = _registered_names(tree)
+    allowed = _allowed_lines(source)
+    findings = []
+    for cls in classes:
+        if cls.name in registered:
+            continue
+        if _suppressed(allowed, cls.lineno, "unregistered-detector"):
+            continue
+        findings.append(Finding(
+            "lints", "unregistered-detector", path, cls.lineno,
+            f"class {cls.name} is detector-shaped (name + prepare + "
+            f"analyse) but never reaches register_detector / "
+            f"_register_builtin — side APIs bypass the campaign"))
+    return findings
+
+
+# -- rule: set-iteration -----------------------------------------------------
+
+def _lint_set_iteration(tree: ast.Module, source: str, path: str) \
+        -> list[Finding]:
+    findings: list[Finding] = []
+    allowed = _allowed_lines(source)
+
+    def scope_bodies():
+        yield tree.body
+        for n in ast.walk(tree):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield n.body
+
+    for body in scope_bodies():
+        set_names: set[str] = set()
+        for stmt in body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and _is_set_expr(stmt.value, set()):
+                set_names.add(stmt.targets[0].id)
+        if not set_names and not any(
+                _is_set_expr(n, set()) for s in body
+                for n in ast.walk(s)):
+            continue
+        for stmt in body:
+            for node in ast.walk(stmt):
+                line, why = _ordered_set_use(node, set_names)
+                if why and not _suppressed(allowed, line,
+                                           "set-iteration"):
+                    findings.append(Finding(
+                        "lints", "set-iteration", path, line,
+                        why + " — set order varies with hash seeding "
+                        "across processes; wrap in sorted() or reduce "
+                        "order-free"))
+    return _dedupe(findings)
+
+
+def _is_set_expr(node: ast.expr, set_names: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    return isinstance(node, ast.Name) and node.id in set_names
+
+
+def _ordered_set_use(node: ast.AST, set_names: set[str]) \
+        -> tuple[int, str | None]:
+    """(line, message) if ``node`` consumes a set in an order-sensitive
+    way; (0, None) otherwise."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in _ORDERED_CONSUMERS and node.args \
+            and _is_set_expr(node.args[0], set_names):
+        return (node.lineno,
+                f"{node.func.id}() over a set materialises arbitrary "
+                f"order")
+    if isinstance(node, ast.For) and _is_set_expr(node.iter,
+                                                  set_names):
+        return (node.lineno, "for-loop iterates a set directly")
+    if isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+        for gen in node.generators:
+            if _is_set_expr(gen.iter, set_names):
+                return (node.lineno,
+                        "comprehension iterates a set into an ordered "
+                        "result")
+    return (0, None)
+
+
+def _dedupe(findings: list[Finding]) -> list[Finding]:
+    seen: set[tuple] = set()
+    out = []
+    for f in findings:
+        k = (f.rule, f.path, f.line)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+# -- driver ------------------------------------------------------------------
+
+_RULES = (
+    (_lint_rng, RNG_SCOPE),
+    (_lint_wallclock, WALLCLOCK_SCOPE),
+    (_lint_detectors, DETECTOR_SCOPE),
+    (_lint_set_iteration, SET_SCOPE),
+)
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """Run every rule on one module's source (scope-independent; the
+    unit the self-test drives)."""
+    tree = ast.parse(source)
+    findings: list[Finding] = []
+    for rule, _scope in _RULES:
+        findings.extend(rule(tree, source, path))
+    return findings
+
+
+def check(root=None) -> list[Finding]:
+    """Lint the repo: each rule over its directory scope."""
+    pkg = _package_root(root)
+    findings: list[Finding] = []
+    for rule, scopes in _RULES:
+        for f in _files(pkg, scopes):
+            src = f.read_text()
+            try:
+                tree = ast.parse(src)
+            except SyntaxError as e:
+                findings.append(Finding(
+                    "lints", "syntax-error", _rel(f), e.lineno or 0,
+                    f"unparsable module: {e.msg}"))
+                continue
+            findings.extend(rule(tree, src, _rel(f)))
+    return _dedupe_all(findings)
+
+
+def _dedupe_all(findings: list[Finding]) -> list[Finding]:
+    seen: set[tuple] = set()
+    out = []
+    for f in findings:
+        k = (f.rule, f.path, f.line, f.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+# -- self-test ---------------------------------------------------------------
+
+_SYNTHETIC = {
+    "unseeded-rng": (
+        "import numpy as np\nimport random\n"
+        "x = np.random.rand(4)\n"
+        "g = np.random.default_rng()\n"
+        "y = random.random()\n"),
+    "wallclock": (
+        "import time\n"
+        "def f():\n"
+        "    return time.perf_counter()\n"),
+    "unregistered-detector": (
+        "class Rogue:\n"
+        "    name = 'rogue'\n"
+        "    def prepare(self, graph, mesh, profile=None, cfg=None):\n"
+        "        return self\n"
+        "    def analyse(self, sim):\n"
+        "        return None\n"),
+    "set-iteration": (
+        "def f(xs):\n"
+        "    used = set(xs)\n"
+        "    return list(used)\n"),
+}
+
+_SYNTHETIC_CLEAN = (
+    # every shape the rules must NOT flag
+    "import time\nimport numpy as np\n"
+    "from .detectors import _register_builtin\n"
+    "def now():\n"
+    "    return time.perf_counter()  # lint: allow-wallclock\n"
+    "def noise(rng):\n"
+    "    return rng.normal() + np.random.default_rng(7).normal()\n"
+    "class Fine:\n"
+    "    name = 'fine'\n"
+    "    def prepare(self, *a, **k):\n"
+    "        return self\n"
+    "    def analyse(self, sim):\n"
+    "        return None\n"
+    "ALL = [Fine]\n"
+    "for _cls in ALL:\n"
+    "    _register_builtin(_cls.name, _cls)\n"
+    "def g(xs, links):\n"
+    "    used = set(xs)\n"
+    "    routers = {c for lid in used for c in links[lid]}\n"
+    "    return tuple(sorted(used)), tuple(sorted(routers))\n")
+
+
+def self_test() -> None:
+    """Plant one synthetic violation per rule and assert it is caught;
+    assert the allowlisted/registered/sorted shapes stay clean and the
+    real tree has no findings."""
+    clean = check()
+    assert clean == [], \
+        "clean-tree lint findings:\n" + "\n".join(
+            f.render() for f in clean)
+    for rule, src in _SYNTHETIC.items():
+        got = {f.rule for f in lint_source(src, "<synthetic>")}
+        assert rule in got, \
+            f"rule {rule} not triggered (got {got or 'nothing'})"
+    benign = lint_source(_SYNTHETIC_CLEAN, "<synthetic-clean>")
+    assert benign == [], \
+        "false positives on benign shapes:\n" + "\n".join(
+            f.render() for f in benign)

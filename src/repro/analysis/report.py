@@ -1,0 +1,56 @@
+"""Shared finding/report types for the static-analysis passes.
+
+Every pass (:mod:`.memory_model`, :mod:`.kernel_audit`, :mod:`.lints`)
+reduces to a list of :class:`Finding` records; the CLI
+(``python -m repro.analysis``) renders them for humans (one
+``path:line: [pass/rule] message`` per finding) or as JSON, and exits
+nonzero iff any finding survived.  Keeping the record type dumb and
+shared means a new pass only has to produce findings — reporting, JSON
+and the exit-code contract come for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One static-analysis violation.
+
+    ``check`` names the pass (``memory`` | ``kernels`` | ``lints``),
+    ``rule`` the specific invariant within it (stable kebab-case
+    identifiers — CI logs and allowlists key on them), ``path``/``line``
+    the location (``line == 0`` for whole-config findings with no source
+    anchor, e.g. a memory-budget overrun).
+    """
+    check: str
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.check}/{self.rule}] {self.message}"
+
+
+def render_findings(findings: list[Finding]) -> str:
+    """Human-readable report: one line per finding plus a tally."""
+    lines = [f.render() for f in findings]
+    n = len(findings)
+    lines.append(f"{n} finding{'s' if n != 1 else ''}")
+    return "\n".join(lines)
+
+
+def findings_to_json(findings: list[Finding], *, extra=None) -> str:
+    """Machine-readable report (the CLI's ``--json`` output)."""
+    doc = {
+        "findings": [dataclasses.asdict(f) for f in findings],
+        "count": len(findings),
+        "ok": not findings,
+    }
+    if extra:
+        doc.update(extra)
+    return json.dumps(doc, indent=2, sort_keys=True)

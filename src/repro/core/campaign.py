@@ -186,6 +186,15 @@ EXECUTORS = ("thread", "process")
 FAILURE_KINDS = ("core", "link", "router")
 
 
+def _wall_clock() -> float:
+    """The campaign's one blessed wall-clock read, feeding the
+    ``compare=False`` wall-time telemetry only (``wall_time_stats``) —
+    never a scenario outcome, verdict, or RNG stream.  Centralised so
+    the determinism lint (``repro.analysis.lints`` rule ``wallclock``)
+    has exactly one allowlisted reader to audit."""
+    return time.perf_counter()  # lint: allow-wallclock
+
+
 def _normalise_kind(kind) -> str:
     """Normalise a grid kind entry to its canonical string form.
 
@@ -673,15 +682,15 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
     when never flagged).  Detectors without ``stream_analyse`` fall back
     to post-hoc analysis with no latency measurement."""
     failures, sim_seed = materialise(grid, s, dep)
-    t0 = time.perf_counter()
+    t0 = _wall_clock()
     sim = dep.sloth.run(list(failures) if failures else None, seed=sim_seed)
-    sim_wall = time.perf_counter() - t0
+    sim_wall = _wall_clock() - t0
     mesh = dep.sloth.mesh
     results = []
     compression = 0.0
     total_time = float(sim.total_time)
     for det in dep.detectors:
-        t1 = time.perf_counter()
+        t1 = _wall_clock()
         latency = None
         if streaming > 0 and hasattr(det, "stream_analyse"):
             v, first_flag = det.stream_analyse(sim, n_chunks=streaming)
@@ -691,7 +700,7 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
                            if first_flag is not None else math.inf)
         else:
             v = det.analyse(sim)
-        wall = time.perf_counter() - t1
+        wall = _wall_clock() - t1
         matched, rank, ranks, _ = judge_verdict(v, failures, mesh)
         if compression == 0.0 and v.recorder is not None:
             compression = float(v.recorder.compression_ratio)

@@ -35,7 +35,8 @@ import dataclasses
 import numpy as np
 
 from . import probes as P
-from .sketch import FailSlowSketch, Pattern, SketchParams, split_key
+from .sketch import (STAGE2_SLOT_BYTES, FailSlowSketch, Pattern,
+                     SketchParams, split_key)
 from .simulator import SimResult
 
 #: Valid ``record(..., impl=)`` spellings.
@@ -53,7 +54,7 @@ class RecorderOutput:
     n_comp_records: int
     n_comm_records: int
     # drained-eviction stream depth (Stage-2 FIFO victims written off-chip;
-    # included in sketch_*_bytes at stage2_bytes() / L each)
+    # included in sketch_*_bytes at one STAGE2_SLOT_BYTES each)
     n_comp_drained: int = 0
     n_comm_drained: int = 0
     impl: str = "ref"
@@ -65,6 +66,17 @@ class RecorderOutput:
     @property
     def sketch_bytes(self) -> int:
         return self.sketch_comp_bytes + self.sketch_comm_bytes
+
+    def onchip_bytes(self) -> int:
+        """SRAM-resident bytes only: ``sketch_bytes`` minus the off-chip
+        drained-pattern stream (each drained row costs exactly one
+        Stage-2 slot).  This is the quantity the static memory model
+        (:mod:`repro.analysis.memory_model`) predicts without running
+        anything — the property tests assert exact agreement for both
+        impls."""
+        return (self.sketch_bytes
+                - (self.n_comp_drained + self.n_comm_drained)
+                * STAGE2_SLOT_BYTES)
 
     @property
     def compression_ratio(self) -> float:
@@ -135,8 +147,11 @@ def _sketch_runs_batched(params: SketchParams, keys, reps, durs, vals,
         jnp.asarray(np.asarray(dts, dtype=np.float32)), params=params)
     pats = sketch_ops.patterns(state, drain, key_tag=key_tag)
     n_drained = int(np.asarray(drain["d_n"]))
-    per_pattern = params.stage2_bytes() // max(params.L, 1)
-    return pats, params.total_bytes() + n_drained * per_pattern, n_drained
+    # byte-identical to FailSlowSketch.compressed_bytes(): on-chip state
+    # plus one exact Stage-2 slot per drained pattern
+    return (pats,
+            params.total_bytes() + n_drained * params.stage2_slot_bytes(),
+            n_drained)
 
 
 def _sketch_runs(impl: str, params: SketchParams, keys, reps, durs, vals,

@@ -62,6 +62,15 @@ def hash_bucket(lo, hi, table: int, m: int):
     return int((x & 0x7FFFFFFF) % m)
 
 
+#: Bytes of one Stage-2 pattern slot (keys + count + 4 f32 stats + f64
+#: timestamp span + arrival).  The unit for drained-pattern accounting:
+#: each FIFO-evicted pattern costs exactly one slot in the off-chip
+#: compressed stream, independent of L — never derive it by dividing
+#: ``stage2_bytes()`` by L, which floor-truncates the moment
+#: ``stage2_bytes`` gains any non-slot component.
+STAGE2_SLOT_BYTES = 4 + 4 + 4 + 4 * 4 + 8 + 4
+
+
 @dataclasses.dataclass(frozen=True)
 class SketchParams:
     d: int = 2          # hash tables
@@ -76,8 +85,14 @@ class SketchParams:
     def stage1_bytes(self) -> int:
         return self.d * self.m * (4 + 4 + 4)      # lo, hi, freq
 
+    def stage2_slot_bytes(self) -> int:
+        """Exact bytes of one Stage-2 slot (see
+        :data:`STAGE2_SLOT_BYTES`) — the per-pattern cost of the
+        drained-eviction stream."""
+        return STAGE2_SLOT_BYTES
+
     def stage2_bytes(self) -> int:
-        return self.L * (4 + 4 + 4 + 4 * 4 + 8 + 4)  # keys+count+stats+ts
+        return self.L * self.stage2_slot_bytes()
 
     def total_bytes(self) -> int:
         return self.stage1_bytes() + self.stage2_bytes()
@@ -279,9 +294,13 @@ class FailSlowSketch:
         return self.p.total_bytes()
 
     def compressed_bytes(self) -> int:
-        """Total compressed trace: on-chip state + drained pattern stream."""
-        per_pattern = self.p.stage2_bytes() // max(self.p.L, 1)
-        return self.p.total_bytes() + len(self.drained) * per_pattern
+        """Total compressed trace: on-chip state + drained pattern
+        stream, each drained pattern at exactly one Stage-2 slot
+        (``stage2_slot_bytes()`` — not ``stage2_bytes() // L``, whose
+        floor truncation under-counts whenever ``stage2_bytes`` is not
+        an exact multiple of ``L``)."""
+        return (self.p.total_bytes()
+                + len(self.drained) * self.p.stage2_slot_bytes())
 
     def compression_ratio(self, raw_bytes: float) -> float:
         return raw_bytes / max(self.compressed_bytes(), 1)

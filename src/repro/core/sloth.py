@@ -76,6 +76,15 @@ class SlothConfig:
     # recorder per campaign via run_campaign(cfg=SlothConfig(
     # recorder_impl="batched")).
     recorder_impl: str = "ref"
+    # Per-chip on-chip memory budget for the recorder, in KiB (the
+    # paper's "within kilobytes" regime).  Checked *statically* at
+    # pipeline construction by repro.analysis.memory_model.
+    # validate_config(): the comp + comm sketch footprint — paper
+    # accounting for impl="ref", the larger of accounting and the packed
+    # jnp state for impl="batched" — must fit, or Sloth.__init__ raises
+    # MemoryBudgetError before anything runs.  Set to None to disable
+    # (benchmark sweeps deliberately explore over-budget geometries).
+    budget_kb: float | None = 256.0
     # -- mesh-size-aware flag scaling --------------------------------------
     # The flag thresholds are calibrated on the paper's 4×4 chip (16 cores,
     # 48 links).  The expected extreme of a *healthy* population grows with
@@ -115,6 +124,10 @@ class Sloth:
         self.graph = graph
         self.mesh = mesh
         self.cfg = cfg or SlothConfig()
+        # static guard: reject sketch geometries that cannot fit the
+        # on-chip budget before any simulation or recording happens
+        from ..analysis.memory_model import validate_config
+        validate_config(self.cfg)
         self.mapped: MappedGraph = map_graph(graph, mesh)
         self.sim_cfg = sim_cfg or SimConfig(
             mu_c=calibrate(graph.total_flops(), mesh.n_cores))

@@ -168,8 +168,10 @@ class _SketchStream:
     def compressed_bytes(self) -> int:
         if self.impl == "ref":
             return self.sk.compressed_bytes()
-        per_pattern = self.params.stage2_bytes() // max(self.params.L, 1)
-        return self.params.total_bytes() + self.n_drained * per_pattern
+        # one exact Stage-2 slot per drained pattern, matching
+        # FailSlowSketch.compressed_bytes and recorder._sketch_runs_batched
+        return (self.params.total_bytes()
+                + self.n_drained * self.params.stage2_slot_bytes())
 
 
 class StreamingRecorder:
@@ -193,10 +195,16 @@ class StreamingRecorder:
                  packet_bytes: int = P.PACKET_BYTES,
                  max_packets: int = 64,
                  hop_latency: float = 50e-9,
-                 impl: str = "ref"):
+                 impl: str = "ref",
+                 budget_kb: float | None = 256.0):
         if impl not in RECORDER_IMPLS:
             raise ValueError(f"unknown recorder impl {impl!r}; "
                              f"options: {RECORDER_IMPLS}")
+        # static on-chip budget guard (KiB; None disables) — the
+        # always-on recorder holds exactly this state forever, so an
+        # over-budget geometry is rejected before the first observe()
+        from ..analysis.memory_model import validate_params
+        validate_params(params, comm_params, impl, budget_kb)
         self.impl = impl
         self.instr_per_task = instr_per_task
         self.packet_bytes = packet_bytes
@@ -262,7 +270,8 @@ class SlothStream:
         self.recorder = StreamingRecorder(
             cfg.sketch, instr_per_task=cfg.instr_per_task,
             hop_latency=pipeline.sim_cfg.hop_latency,
-            impl=cfg.recorder_impl)
+            impl=cfg.recorder_impl,
+            budget_kb=getattr(cfg, "budget_kb", 256.0))
         self.verdicts: list = []
         self.first_flag_time: float | None = None
 

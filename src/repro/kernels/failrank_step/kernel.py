@@ -19,6 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Structural contract checked by repro.analysis.kernel_audit: rank-1
+# grid over column stripes; each stripe writes disjoint output blocks
+# and no state is aliased across steps.
+AUDIT = {"grid_rank": 1, "aliased_io": False, "sequential_grid": True}
+
 
 def _kernel(w_ref, l_ref, s_ref, s0_ref, s_out_ref, l_out_ref, *,
             lam: float, alpha: float, beta: float, gamma: float):

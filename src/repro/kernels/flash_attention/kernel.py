@@ -24,6 +24,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# Structural contract checked by repro.analysis.kernel_audit: rank-3
+# grid (bh, q blocks, kv blocks); no aliased state — the online-softmax
+# carries live in VMEM scratch, and the sequential kv axis is what
+# makes that carry sound.
+AUDIT = {"grid_rank": 3, "aliased_io": False, "sequential_grid": True}
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, causal: bool, window: int | None,

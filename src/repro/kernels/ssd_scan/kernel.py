@@ -18,6 +18,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Structural contract checked by repro.analysis.kernel_audit: rank-2
+# grid (bh, chunks); the inter-chunk state lives in VMEM scratch (no
+# aliasing), carried by the sequential chunk axis.
+AUDIT = {"grid_rank": 2, "aliased_io": False, "sequential_grid": True}
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, out_state_ref,
             state_scr, *, chunk: int, seq_len: int):

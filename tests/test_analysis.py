@@ -1,0 +1,280 @@
+"""repro.analysis: static memory model vs measured bytes, kernel audit,
+determinism lints, CLI exit-code contract, and the construction-time
+budget guards."""
+
+import dataclasses
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from proptest import given, settings, st
+
+from repro.analysis import (MemoryBudgetError, memory_report,
+                            run_checks, validate_params)
+from repro.analysis import kernel_audit, lints, memory_model
+from repro.core.failures import FailSlow
+from repro.core.graph import build_workload
+from repro.core.recorder import record
+from repro.core.routing import Mesh2D
+from repro.core.sketch import (STAGE2_SLOT_BYTES, FailSlowSketch,
+                               SketchParams)
+from repro.core.sloth import Sloth, SlothConfig
+from repro.core.streaming import StreamingRecorder
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# the clean tree passes; each pass's planted violations are caught
+# ---------------------------------------------------------------------------
+
+def test_clean_tree_has_no_findings():
+    assert run_checks("all") == []
+
+
+def test_memory_self_test():
+    memory_model.self_test()
+
+
+def test_kernel_audit_self_test():
+    kernel_audit.self_test()
+
+
+def test_lints_self_test():
+    lints.self_test()
+
+
+def test_cli_exit_codes():
+    """--check all exits 0 on the clean tree; a seeded violation (the
+    memory pass under an impossible budget) exits nonzero."""
+    env_cmd = [sys.executable, "-m", "repro.analysis"]
+    ok = subprocess.run(env_cmd + ["--check", "all"], cwd=REPO,
+                        env={"PYTHONPATH": str(REPO / "src"),
+                             "PATH": "/usr/bin:/bin"},
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run(env_cmd + ["--check", "memory",
+                                    "--budget-kb", "1"], cwd=REPO,
+                         env={"PYTHONPATH": str(REPO / "src"),
+                              "PATH": "/usr/bin:/bin"},
+                         capture_output=True, text=True)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "over-budget" in bad.stdout
+
+
+def test_each_pass_flags_its_synthetic_violation():
+    """One seeded violation per pass, through the pass's public unit
+    API (the CLI --self-test covers the same ground in CI)."""
+    # memory: an over-budget geometry
+    rep = memory_report(SketchParams(m=65536), impl="batched")
+    assert rep["total_budget_bytes"] > 256 * 1024
+    # kernels: a parallel grid writing through an alias
+    src = kernel_audit._SYNTHETIC_BAD
+    assert any(f.rule == "parallel-write-race"
+               for f in kernel_audit.audit_source(src, "<s>"))
+    # lints: unseeded global RNG
+    fs = lints.lint_source("import numpy as np\n"
+                           "x = np.random.rand(3)\n", "<s>")
+    assert any(f.rule == "unseeded-rng" for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# memory model == measured bytes (property tests, both impls)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_static_model_matches_array_nbytes(data):
+    """Closed forms equal the actual allocated array nbytes across
+    randomized geometries, for the ref numpy arrays, the packed jnp
+    state, and the drain buffer."""
+    from repro.kernels.sketch_update import ref as kref
+    p = SketchParams(d=data.draw(st.integers(1, 4)),
+                     m=data.draw(st.sampled_from([16, 64, 257, 1024])),
+                     H=data.draw(st.integers(1, 8)),
+                     L=data.draw(st.sampled_from([8, 33, 256, 1024])))
+    cap = data.draw(st.sampled_from([0, 1, 7, 256]))
+
+    sk = FailSlowSketch(p)
+    measured_ref = sum(a.nbytes for a in
+                       (sk.keys_lo, sk.keys_hi, sk.valid, sk.freq))
+    assert measured_ref == memory_model.ref_stage1_nbytes(p)
+
+    state = kref.make_state(p)
+    assert sum(int(v.nbytes) for v in state.values()) \
+        == memory_model.packed_state_bytes(p)
+
+    drain = kref.make_drain(cap)
+    assert sum(int(v.nbytes) for v in drain.values()) \
+        == memory_model.drain_bytes(cap)
+
+    assert memory_model.accounting_bytes(p) == p.total_bytes()
+
+
+@pytest.fixture(scope="module")
+def deployment():
+    sloth = Sloth(build_workload("darknet19"), Mesh2D(4))
+    sim = sloth.run([FailSlow("core", 5, 1.0, 8.0, 10.0)], seed=0)
+    return sloth, sim
+
+
+@pytest.mark.parametrize("impl", ["ref", "batched"])
+@pytest.mark.parametrize("geometry", [
+    SketchParams(),                         # defaults, no eviction
+    SketchParams(d=2, m=256, H=4, L=8),     # forced FIFO eviction
+])
+def test_static_footprint_equals_measured_onchip(deployment, impl,
+                                                 geometry):
+    """The execution-free accounting model predicts the measured
+    RecorderOutput.onchip_bytes() exactly — including under eviction
+    pressure, where the drained stream must be excluded from the
+    on-chip figure and accounted at exactly one Stage-2 slot per
+    drained pattern."""
+    sloth, sim = deployment
+    out = record(sim, geometry, hop_latency=sloth.sim_cfg.hop_latency,
+                 impl=impl)
+    static = 2 * memory_model.accounting_bytes(geometry)  # comp + comm
+    assert out.onchip_bytes() == static
+    drained = out.n_comp_drained + out.n_comm_drained
+    assert out.sketch_bytes == static + drained * STAGE2_SLOT_BYTES
+    if geometry.L == 8:
+        assert drained > 0   # the small Stage-2 actually evicted
+
+
+@pytest.mark.parametrize("impl", ["ref", "batched"])
+def test_streaming_footprint_matches_static(deployment, impl):
+    """The always-on recorder's cumulative output obeys the same static
+    accounting (its on-chip state never grows with chunk count)."""
+    from repro.core.streaming import split_sim
+    sloth, sim = deployment
+    p = SketchParams(d=2, m=256, H=4, L=8)
+    rec = StreamingRecorder(p, hop_latency=sloth.sim_cfg.hop_latency,
+                            impl=impl)
+    for chunk in split_sim(sim, 4):
+        rec.observe(chunk)
+    out = rec.output()
+    assert out.onchip_bytes() == 2 * memory_model.accounting_bytes(p)
+
+
+# ---------------------------------------------------------------------------
+# construction-time budget guards
+# ---------------------------------------------------------------------------
+
+def test_over_budget_sloth_config_rejected():
+    cfg = SlothConfig(sketch=SketchParams(m=65536))
+    with pytest.raises(MemoryBudgetError, match="over the .* budget"):
+        Sloth(build_workload("darknet19"), Mesh2D(4), cfg=cfg)
+
+
+def test_budget_none_disables_guard():
+    cfg = SlothConfig(sketch=SketchParams(m=4096), budget_kb=None)
+    Sloth(build_workload("darknet19"), Mesh2D(4), cfg=cfg)
+
+
+def test_default_configs_fit_budget():
+    Sloth(build_workload("darknet19"), Mesh2D(4))
+    Sloth(build_workload("darknet19"), Mesh2D(4),
+          cfg=SlothConfig(recorder_impl="batched"))
+
+
+def test_streaming_recorder_guard():
+    with pytest.raises(MemoryBudgetError):
+        StreamingRecorder(SketchParams(m=65536))
+    StreamingRecorder(SketchParams(m=65536), budget_kb=None)
+    with pytest.raises(MemoryBudgetError):
+        validate_params(SketchParams(), SketchParams(m=65536))
+
+
+def test_budget_error_message_is_actionable():
+    try:
+        StreamingRecorder(SketchParams(m=65536), impl="batched")
+    except MemoryBudgetError as e:
+        msg = str(e)
+        assert "KiB" in msg and "budget_kb" in msg and "m=65536" in msg
+    else:
+        pytest.fail("no MemoryBudgetError raised")
+
+
+# ---------------------------------------------------------------------------
+# satellite: exact per-slot drained accounting (non-divisible geometry)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _HeaderedParams(SketchParams):
+    """A Stage-2 layout with a fixed 24-byte header: stage2_bytes() is
+    no longer an exact multiple of L, the case where the historical
+    ``stage2_bytes() // L`` per-pattern formula floor-truncates."""
+
+    def stage2_bytes(self) -> int:
+        return 24 + self.L * self.stage2_slot_bytes()
+
+
+def test_drained_accounting_is_exact_per_slot():
+    p = _HeaderedParams(d=2, m=1024, H=1, L=7)
+    assert p.stage2_bytes() % p.L != 0   # genuinely non-divisible
+    sk = FailSlowSketch(p)
+    # many distinct keys promoted at H=1 → FIFO evictions past L slots
+    for k in range(p.L + 20):
+        sk.insert(k + 1, 1.0, 1.0, float(k))
+    n = len(sk.drained)
+    assert n > 0
+    exact = p.total_bytes() + n * STAGE2_SLOT_BYTES
+    assert sk.compressed_bytes() == exact
+    # the old floor-division formula under-counts on this geometry
+    old = p.total_bytes() + n * (p.stage2_bytes() // p.L)
+    assert old != exact
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 200), st.integers(2, 31))
+def test_slot_accounting_independent_of_L(extra, L):
+    """Per-drained-pattern cost is the slot size, never a function of
+    L: two sketches with different L but equal drained counts charge
+    identical per-pattern bytes."""
+    rng = np.random.default_rng(extra * 31 + L)
+    p = SketchParams(d=1, m=64, H=1, L=L)
+    sk = FailSlowSketch(p)
+    for k in range(L + extra):
+        sk.insert(int(k + 1), float(rng.random()), 1.0, float(k))
+    per = (sk.compressed_bytes() - p.total_bytes()) / max(
+        len(sk.drained), 1)
+    if sk.drained:
+        assert per == STAGE2_SLOT_BYTES
+
+
+# ---------------------------------------------------------------------------
+# kernel audit: the shipped contracts describe the shipped kernels
+# ---------------------------------------------------------------------------
+
+def test_kernel_audit_contracts_present_and_consistent():
+    findings = kernel_audit.check()
+    assert findings == [], "\n".join(f.render() for f in findings)
+    files = {f.parent.name: f for f in
+             (REPO / "src/repro/kernels").glob("*/kernel.py")}
+    assert set(files) == {"sketch_update", "flash_attention",
+                          "ssd_scan", "failrank_step"}
+    for name, f in files.items():
+        assert "AUDIT" in f.read_text(), f"{name} lost its contract"
+
+
+def test_kernel_audit_catches_grid_rank_drift():
+    """Editing a kernel's grid without updating AUDIT is flagged."""
+    src = (REPO / "src/repro/kernels/failrank_step/kernel.py")\
+        .read_text().replace("grid=(nb,)", "grid=(nb, 2)")
+    fs = kernel_audit.audit_source(src, "<mutated>")
+    assert any(f.rule == "audit-grid-rank-mismatch" for f in fs)
+
+
+def test_lint_wallclock_allowlist_is_tight():
+    """campaign.py keeps exactly one blessed wall-clock reader."""
+    src = (REPO / "src/repro/core/campaign.py").read_text()
+    assert src.count("time.perf_counter()") == 1
+    assert "# lint: allow-wallclock" in src
+    # stripping the marker re-triggers the lint
+    stripped = src.replace("# lint: allow-wallclock", "")
+    fs = lints.lint_source(stripped, "<campaign>")
+    assert any(f.rule == "wallclock" for f in fs)
