@@ -51,6 +51,20 @@ asserted: ``none``-kind scenarios carry no latency, flagged streamed
 positives a finite one, unflagged streamed positives ``inf``.
 Composes with ``--recorder-impl both`` (each impl gets its own
 streamed-vs-post-hoc comparison).
+
+``--mitigation NAME`` (repeatable) closes the detect → mitigate loop:
+every detector × policy cell re-simulates the mitigated deployment and
+the summary gains the recovered-throughput table.  The ``none`` control
+is always included alongside the requested policies, and two gates run
+(the mitigation smoke used in CI): the control's recovered fraction must
+be exactly zero on every scenario, and on decisive core scenarios at
+least one correct acted-on verdict must recover throughput.  With
+``--streaming N`` the mitigation switches mid-stream at the first
+flagged chunk instead of restarting from t=0:
+
+    PYTHONPATH=src python examples/campaign_sweep.py \\
+        --tiny --kinds core --kinds none --severities 10 \\
+        --streaming 4 --mitigation remap
 """
 
 import argparse
@@ -60,9 +74,11 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.campaign import CampaignGrid, run_campaign  # noqa: E402
+from repro.core.campaign import (CampaignGrid, _sev_str,  # noqa: E402
+                                 run_campaign)
 from repro.core.detectors import (DEFAULT_DETECTORS,  # noqa: E402
                                   available_detectors)
+from repro.mitigate.policy import available_policies  # noqa: E402
 from repro.core.recorder import RECORDER_IMPLS  # noqa: E402
 from repro.core.sloth import SlothConfig  # noqa: E402
 
@@ -129,6 +145,11 @@ def main(argv=None) -> int:
                          "scenario, report detection latency, and assert "
                          "streamed verdicts match a post-hoc campaign "
                          "(0 = post-hoc only, the default)")
+    ap.add_argument("--mitigation", action="append", default=None,
+                    metavar="NAME", choices=available_policies(),
+                    help="mitigation policy to judge on every detector "
+                         "verdict (repeatable; the 'none' control is "
+                         "always added; default: no mitigation axis)")
     ap.add_argument("--recorder-impl", default="ref",
                     choices=RECORDER_IMPLS + ("both",),
                     help="SL-Recorder sketch path: per-run numpy oracle "
@@ -140,6 +161,10 @@ def main(argv=None) -> int:
     detectors = (DEFAULT_DETECTORS if args.all_detectors
                  else tuple(args.detectors) if args.detectors
                  else ("sloth",))
+    # the 'none' control rides along whenever mitigation is requested, so
+    # the recovered-throughput table always has its zero baseline
+    pols = (tuple(dict.fromkeys(tuple(args.mitigation) + ("none",)))
+            if args.mitigation else ())
     grid = make_grid(args)
     n = grid.n_scenarios()
     print(f"campaign: {len(grid.workloads)} workloads × "
@@ -150,7 +175,8 @@ def main(argv=None) -> int:
           f"executor {args.executor}, detectors {', '.join(detectors)}, "
           f"recorder {args.recorder_impl}"
           + (f", streaming {args.streaming} chunks" if args.streaming
-             else "") + ")")
+             else "")
+          + (f", mitigation {', '.join(pols)}" if pols else "") + ")")
 
     done = []
 
@@ -164,7 +190,7 @@ def main(argv=None) -> int:
     t0 = time.perf_counter()
     res = run_campaign(grid, workers=args.workers, executor=args.executor,
                        detectors=detectors, cfg=cfg, progress=progress,
-                       streaming=args.streaming)
+                       streaming=args.streaming, mitigation=pols)
     wall = time.perf_counter() - t0
 
     # explicit raises, not asserts, throughout the gates below: these are
@@ -211,6 +237,32 @@ def main(argv=None) -> int:
         check_streaming(res, args.recorder_impl
                         if args.recorder_impl != "both" else "ref", cfg)
 
+    if pols:
+        # mitigation smoke: the control recovers exactly nothing, and on
+        # decisive core scenarios a correct acted-on verdict recovers
+        # throughput
+        for o in res.outcomes:
+            for mo in o.mitigation_results:
+                if mo.policy == "none" and mo.recovered_frac != 0.0:
+                    raise SystemExit(
+                        f"mitigation control FAILED: scenario "
+                        f"{o.scenario_id} policy 'none' recovered "
+                        f"{mo.recovered_frac} (must be exactly 0.0)")
+        decisive = [mo for o in res.outcomes if o.kind == "core"
+                    for mo in o.mitigation_results
+                    if mo.policy != "none" and mo.correct and mo.acted]
+        if decisive:
+            recovered = [mo for mo in decisive if mo.recovered_frac > 0.0]
+            if not recovered:
+                raise SystemExit(
+                    "mitigation smoke FAILED: no correct acted-on core "
+                    "verdict recovered throughput under "
+                    f"{', '.join(p for p in pols if p != 'none')}")
+            print(f"mitigation smoke: control exactly 0.0 on all "
+                  f"{len(res.outcomes)} scenarios; {len(recovered)}/"
+                  f"{len(decisive)} acted core mitigations recovered "
+                  f"throughput")
+
     if args.recorder_impl == "both":
         cfg_b = SlothConfig(recorder_impl="batched")
         res_b = run_campaign(grid, workers=args.workers,
@@ -245,7 +297,8 @@ def main(argv=None) -> int:
                     f"({m.accuracy.successes}/{m.accuracy.trials}) "
                     f"top3 {m.topk_rate(3)*100:6.2f}% "
                     f"recall@3 {m.recall_at(3)*100:6.2f}%")
-        print(f"  {wl:12s} {w}x{h} {kind:9s} x{sev:<8.6g} k={nf} {stat}")
+        print(f"  {wl:12s} {w}x{h} {kind:9s} x{_sev_str(sev):<8s} "
+              f"k={nf} {stat}")
 
     if len(detectors) > 1:
         print(f"\n== per-detector (accuracy / FPR / top-3 / recall@3) ==")

@@ -3,8 +3,8 @@
 The campaign's bit-identity contract (serial == thread == process, and
 seed → scenario derivation) survives only if nothing inside the core
 pipeline consults ambient nondeterminism.  These lints make the
-contract machine-checked over ``core/`` and ``kernels/`` (detector
-registration also covers ``distributed/``):
+contract machine-checked over ``core/``, ``kernels/`` and ``mitigate/``
+(registration also covers ``distributed/``):
 
 * ``unseeded-rng`` — module-level ``np.random.*`` calls (the legacy
   global generator), zero-argument ``np.random.default_rng()``, and
@@ -17,11 +17,14 @@ registration also covers ``distributed/``):
   marker on the offending line — ``campaign._wall_clock`` is the one
   blessed reader.
 * ``unregistered-detector`` — a public detector-shaped class (a ``name``
-  string attribute plus both ``prepare`` and ``analyse`` methods) that
-  never reaches ``register_detector`` / ``_register_builtin`` grows a
-  side API the campaign can't see; the resolver follows both direct
-  registration calls and the ``ALL_BASELINES``-style pattern (a module
-  list of classes swept by a ``for`` loop that registers each).
+  string attribute plus both ``prepare`` and ``analyse`` methods) or
+  mitigation-policy-shaped class (``name`` plus both ``plan`` and
+  ``apply``) that never reaches its registry
+  (``register_detector`` / ``_register_builtin`` for detectors,
+  ``register_policy`` / ``_register_builtin_policy`` for policies)
+  grows a side API the campaign can't see; the resolver follows both
+  direct registration calls and the ``ALL_BASELINES``-style pattern (a
+  module list of classes swept by a ``for`` loop that registers each).
 * ``set-iteration`` — materialising a ``set`` in an order-sensitive
   position (``list()``/``tuple()``/``enumerate()``, a ``for`` loop, or
   a list/generator comprehension).  Python set order varies with hash
@@ -44,17 +47,20 @@ from pathlib import Path
 from .report import Finding
 
 #: Directories (relative to the repro package) each lint sweeps.
-RNG_SCOPE = ("core", "kernels")
-WALLCLOCK_SCOPE = ("core", "kernels")
-DETECTOR_SCOPE = ("core", "distributed")
-SET_SCOPE = ("core", "kernels")
+#: ``mitigate`` is in every scope: policies feed re-simulated campaign
+#: outcomes, so they carry the same determinism contract as ``core``.
+RNG_SCOPE = ("core", "kernels", "mitigate")
+WALLCLOCK_SCOPE = ("core", "kernels", "mitigate")
+DETECTOR_SCOPE = ("core", "distributed", "mitigate")
+SET_SCOPE = ("core", "kernels", "mitigate")
 
 _WALLCLOCK_TIME_FNS = {"time", "perf_counter", "monotonic",
                        "process_time"}
 _WALLCLOCK_DT_FNS = {"now", "utcnow", "today"}
 _LEGACY_NP_RANDOM_OK = {"Generator", "default_rng", "SeedSequence",
                         "PCG64", "Philox", "BitGenerator"}
-_REGISTER_FNS = {"register_detector", "_register_builtin"}
+_REGISTER_FNS = {"register_detector", "_register_builtin",
+                 "register_policy", "_register_builtin_policy"}
 _ORDER_FREE = {"sorted", "min", "max", "sum", "len", "any", "all",
                "set", "frozenset"}
 _ORDERED_CONSUMERS = {"list", "tuple", "enumerate"}
@@ -193,10 +199,13 @@ def _lint_wallclock(tree: ast.Module, source: str, path: str) \
 
 # -- rule: unregistered-detector ---------------------------------------------
 
-def _detector_classes(tree: ast.Module) -> list[ast.ClassDef]:
-    """Public classes with a string ``name`` attribute and both
-    ``prepare`` and ``analyse`` methods — the duck type
-    ``core.detectors`` registers."""
+def _detector_classes(tree: ast.Module) \
+        -> list[tuple[ast.ClassDef, str]]:
+    """Public classes matching a registry duck type, tagged with which:
+    a string ``name`` attribute plus ``prepare`` + ``analyse``
+    (``"detector"``, the shape ``core.detectors`` registers) or plus
+    ``plan`` + ``apply`` (``"policy"``, the shape ``mitigate.policy``
+    registers)."""
     out = []
     for node in tree.body:
         if not isinstance(node, ast.ClassDef) or \
@@ -209,11 +218,15 @@ def _detector_classes(tree: ast.Module) -> list[ast.ClassDef]:
             and isinstance(s.value, ast.Constant)
             and isinstance(s.value.value, str)
             for s in node.body)
+        if not has_name:
+            continue
         methods = {s.name for s in node.body
                    if isinstance(s, (ast.FunctionDef,
                                      ast.AsyncFunctionDef))}
-        if has_name and {"prepare", "analyse"} <= methods:
-            out.append(node)
+        if {"prepare", "analyse"} <= methods:
+            out.append((node, "detector"))
+        elif {"plan", "apply"} <= methods:
+            out.append((node, "policy"))
     return out
 
 
@@ -269,17 +282,23 @@ def _lint_detectors(tree: ast.Module, source: str, path: str) \
         return []
     registered = _registered_names(tree)
     allowed = _allowed_lines(source)
+    shapes = {
+        "detector": ("detector-shaped (name + prepare + analyse)",
+                     "register_detector / _register_builtin"),
+        "policy": ("mitigation-policy-shaped (name + plan + apply)",
+                   "register_policy / _register_builtin_policy"),
+    }
     findings = []
-    for cls in classes:
+    for cls, kind in classes:
         if cls.name in registered:
             continue
         if _suppressed(allowed, cls.lineno, "unregistered-detector"):
             continue
+        shape, fns = shapes[kind]
         findings.append(Finding(
             "lints", "unregistered-detector", path, cls.lineno,
-            f"class {cls.name} is detector-shaped (name + prepare + "
-            f"analyse) but never reaches register_detector / "
-            f"_register_builtin — side APIs bypass the campaign"))
+            f"class {cls.name} is {shape} but never reaches {fns} — "
+            f"side APIs bypass the campaign"))
     return findings
 
 
@@ -429,7 +448,13 @@ _SYNTHETIC = {
         "    def prepare(self, graph, mesh, profile=None, cfg=None):\n"
         "        return self\n"
         "    def analyse(self, sim):\n"
-        "        return None\n"),
+        "        return None\n"
+        "class RoguePolicy:\n"
+        "    name = 'roguepol'\n"
+        "    def plan(self, verdict, mapped, mesh, cfg=None):\n"
+        "        return None\n"
+        "    def apply(self, plan, mapped, cfg=None):\n"
+        "        return mapped\n"),
     "set-iteration": (
         "def f(xs):\n"
         "    used = set(xs)\n"
@@ -453,6 +478,13 @@ _SYNTHETIC_CLEAN = (
     "ALL = [Fine]\n"
     "for _cls in ALL:\n"
     "    _register_builtin(_cls.name, _cls)\n"
+    "class FinePolicy:\n"
+    "    name = 'finepol'\n"
+    "    def plan(self, verdict, mapped, mesh, cfg=None):\n"
+    "        return None\n"
+    "    def apply(self, plan, mapped, cfg=None):\n"
+    "        return mapped\n"
+    "register_policy('finepol', FinePolicy)\n"
     "def g(xs, links):\n"
     "    used = set(xs)\n"
     "    routers = {c for lid in used for c in links[lid]}\n"
@@ -471,6 +503,11 @@ def self_test() -> None:
         got = {f.rule for f in lint_source(src, "<synthetic>")}
         assert rule in got, \
             f"rule {rule} not triggered (got {got or 'nothing'})"
+    planted = lint_source(_SYNTHETIC["unregistered-detector"],
+                          "<synthetic>")
+    caught = {f.message.split()[1] for f in planted}
+    assert {"Rogue", "RoguePolicy"} <= caught, \
+        f"both registry duck types must be caught (got {caught})"
     benign = lint_source(_SYNTHETIC_CLEAN, "<synthetic-clean>")
     assert benign == [], \
         "false positives on benign shapes:\n" + "\n".join(

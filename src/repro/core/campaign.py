@@ -48,12 +48,26 @@ quality inside heterogeneous scenarios.  ``'none'`` cells are negative
 — they are enumerated once per replicate with ``severity = 0.0`` and
 ``n_failures = 0``.
 
+``kind='mixed'`` additionally honours the grid's ``mixed_weights`` knob
+(e.g. ``{'core': 7, 'link': 3}`` for the paper's 7:3 core:link split):
+each kind's weight is split uniformly over its placeable pool, and kinds
+absent from the mapping are never drawn.  The default ``None`` keeps the
+uniform union-population draw bit-identically.
+
 Severity is a first-class swept axis: ``severities`` entries may be plain
 floats, a ``'linspace:LO:HI:N'`` string or a ``('linspace', lo, hi, n)``
 tuple — linspace specs expand (via ``np.linspace``) at grid construction,
-which makes near-detection-threshold sweeps one-line grid edits.
+which makes near-detection-threshold sweeps one-line grid edits.  A
+*nested* tuple of ≥2 numbers (``severities=((1.5, 10.0),)``) is a
+**per-failure severity mix**: each of the scenario's failures gets its
+own slowdown (the i-th severity to the i-th drawn site — for composite
+kinds that is the canonicalised component order), and the mix pins the
+scenario's failure count to the tuple length the same way composite kinds
+do.  Per-failure severities are carried in
+``ScenarioOutcome.truth_severities``.
 ``CampaignResult.severity_curve()`` returns the per-severity
-accuracy / FPR / recall@k readout with Wilson CIs.
+accuracy / FPR / recall@k readout with Wilson CIs, and
+``severity_curve_by_mesh()`` splits it per mesh size.
 
 Every scenario is fully determined by ``(campaign_seed, workload, mesh,
 kind, severity, n_failures, rep)``: locations, onset times, durations and
@@ -113,6 +127,26 @@ onset to the first flagged window, aggregated by
 ``metrics.detection`` summary.  ``examples/campaign_sweep.py
 --streaming`` runs the streaming-vs-post-hoc parity gate in CI.
 
+Mitigation axis
+---------------
+``run_campaign(..., mitigation=('remap', 'none'))`` closes the detect →
+mitigate loop: every detector's judged verdict is handed to every named
+mitigation policy (:mod:`repro.mitigate` — registered like detectors),
+the policy's plan is applied to the deployment (cores excluded from the
+mapping, links detoured via ``DetourMesh``), and the mitigated deployment
+is re-simulated over the remaining failure window with the scenario's own
+simulator seed and probe plan.  Each (detector, policy) pair yields one
+``MitigationOutcome`` per scenario; ``metrics.by_mitigation`` reduces
+them to recovered-throughput statistics — the fraction of the
+failure-induced gap recovered under correct verdicts, the post-mitigation
+slowdown vs healthy, and the mis-mitigation penalty paid when a policy
+acted on a wrong or false verdict (a sharp end-to-end measure of verdict
+quality).  Combined with ``streaming=N``, mitigation engages at each
+detector's first flagged window, so detection latency composes with
+recovery; without streaming it models a post-hoc restart.  The ``none``
+policy is the control: it never acts and its recovered throughput is
+exactly zero.
+
 Execution model
 ---------------
 ``run_campaign(..., workers=N, executor='thread'|'process')``:
@@ -163,13 +197,19 @@ from .detectors import (DEFAULT_DETECTORS, Detector, get_detector,
                         instantiate_detector)
 from .failures import FailSlow, judge_verdict, truth_candidates
 from .graph import build_workload
-from .metrics import (CampaignMetrics, DetectorOutcome, ScenarioOutcome,
-                      SeverityPoint, TruthKindMetrics, aggregate,
-                      by_detector, by_truth_kind, deployment_overheads,
-                      detector_cells, severity_curve, wall_time_stats)
+from .metrics import (CampaignMetrics, DetectorOutcome, MitigationOutcome,
+                      MitigationStat, ScenarioOutcome, SeverityPoint,
+                      TruthKindMetrics, aggregate, by_detector,
+                      by_mitigation, by_truth_kind, deployment_overheads,
+                      detector_cells, severity_curve, severity_curve_by_mesh,
+                      wall_time_stats)
 from .routing import Mesh2D
-from .simulator import SimResult, simulate
+from .simulator import SimResult, simulate, simulate_mitigated
 from .sloth import Sloth, SlothConfig, SlothDetector
+# submodule import (not the package) so a partially-initialised
+# repro.mitigate package during circular-ish import chains still resolves
+from ..mitigate.policy import (get_policy, instantiate_policy,
+                               work_done_frac)
 
 __all__ = [
     "KINDS", "MIXED", "FAILURE_KINDS", "EXECUTORS", "DEFAULT_DETECTORS",
@@ -262,35 +302,65 @@ def _mesh_dims(mesh) -> tuple[int, int]:
     return w, h
 
 
-def _expand_severities(entries) -> tuple[float, ...]:
-    """Expand a severities spec to a flat float tuple.
+def _per_failure_severities(e) -> tuple[float, ...]:
+    """Validate one per-failure severity mix entry (a tuple/list of ≥2
+    slowdown factors, e.g. ``(1.5, 10.0)`` for a mild first failure with a
+    severe second one)."""
+    if len(e) == 1:
+        # a 1-tuple would be indistinguishable from the scalar severity it
+        # contains once a scenario carries one failure — demand the
+        # unambiguous spelling (mirrors the single-kind-tuple rule)
+        raise ValueError(
+            f"single-entry severity tuple {tuple(e)!r} is ambiguous: "
+            f"spell it as the plain severity {e[0]!r}")
+    try:
+        tup = tuple(float(x) for x in e)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"bad severity entry {e!r}: tuple entries must be "
+            f"('linspace', lo, hi, n) or a per-failure severity mix of "
+            f"numbers") from None
+    for x in tup:
+        if not x > 0.0:
+            raise ValueError(
+                f"severities must be positive slowdown factors, got {x} "
+                f"in {tup!r}")
+    return tup
 
-    Entries may be plain numbers, ``'linspace:LO:HI:N'`` strings or
-    ``('linspace', lo, hi, n)`` tuples; linspace specs expand via
-    ``np.linspace`` so near-threshold sweeps are declared, not typed out.
-    Exact duplicates (e.g. a plain entry also covered by a linspace) are
-    dropped, keeping first occurrence: duplicate severity cells would
-    share one RNG stream and double-count bit-identical outcomes in
-    every metric.
+
+def _expand_severities(entries) -> tuple:
+    """Expand a severities spec to a flat tuple of cells.
+
+    Entries may be plain numbers, ``'linspace:LO:HI:N'`` strings,
+    ``('linspace', lo, hi, n)`` tuples, or **per-failure severity mixes**
+    — a tuple of ≥2 numbers like ``(1.5, 10.0)`` assigning each of a
+    scenario's failures its own slowdown (the mix pins the scenario's
+    failure count to the tuple length; with composite kinds the
+    severities align index-wise with the canonicalised kind components).
+    A per-failure mix must be *nested* (``severities=((1.5, 10.0),)``) —
+    a bare top-level tuple of numbers remains a list of scalar severity
+    cells.  Linspace specs expand via ``np.linspace`` so near-threshold
+    sweeps are declared, not typed out.  Exact duplicates (e.g. a plain
+    entry also covered by a linspace) are dropped, keeping first
+    occurrence: duplicate severity cells would share one RNG stream and
+    double-count bit-identical outcomes in every metric.
     """
     if isinstance(entries, (str, int, float)):
         entries = (entries,)
     elif isinstance(entries, (tuple, list)) and entries \
             and entries[0] == "linspace":
         entries = (tuple(entries),)    # a bare spec, not a list of specs
-    out: list[float] = []
+    out: list[float | tuple[float, ...]] = []
     for e in entries:
         spec = None
         if isinstance(e, str) and e.startswith("linspace"):
             spec = e.split(":")[1:]
         elif isinstance(e, (tuple, list)):
-            # any tuple/list entry must be a linspace spec — falling
-            # through to float(e) would raise an unhelpful TypeError
-            if not e or e[0] != "linspace":
-                raise ValueError(
-                    f"bad severity spec {e!r}: tuple entries must be "
-                    f"('linspace', lo, hi, n)")
-            spec = list(e[1:])
+            if e and e[0] == "linspace":
+                spec = list(e[1:])
+            else:
+                out.append(_per_failure_severities(e))
+                continue
         if spec is not None:
             try:
                 lo, hi, n = float(spec[0]), float(spec[1]), int(spec[2])
@@ -304,7 +374,7 @@ def _expand_severities(entries) -> tuple[float, ...]:
         else:
             out.append(float(e))
     for s in out:
-        if not s > 0.0:
+        if not isinstance(s, tuple) and not s > 0.0:
             raise ValueError(
                 f"severities must be positive slowdown factors, got {s}")
     return tuple(dict.fromkeys(out))
@@ -335,6 +405,47 @@ def _normalise_detectors(detectors, baselines) -> tuple[str, ...]:
     return names
 
 
+def _normalise_policies(mitigation) -> tuple[str, ...]:
+    """Resolve the ``mitigation=`` request to a validated, deduplicated
+    policy-name tuple (``None``/``False``/empty → no mitigation)."""
+    if mitigation is None or mitigation is False:
+        return ()
+    if isinstance(mitigation, str):
+        mitigation = (mitigation,)
+    names = tuple(dict.fromkeys(str(n).lower() for n in mitigation))
+    for n in names:
+        get_policy(n)            # raises KeyError for unknown names
+    return names
+
+
+def _normalise_mixed_weights(mw):
+    """Normalise a ``mixed_weights`` spec — a ``{kind: weight}`` mapping or
+    ``((kind, weight), ...)`` pairs — to canonical ``FAILURE_KINDS``-ordered
+    pairs (hashable and spelling-independent).  Kinds absent from the spec
+    get weight 0, i.e. are never drawn."""
+    if mw is None:
+        return None
+    items = mw.items() if isinstance(mw, dict) else tuple(mw)
+    out: dict[str, float] = {}
+    for kind, wgt in items:
+        k = str(kind).lower()
+        if k not in FAILURE_KINDS:
+            raise ValueError(
+                f"mixed_weights kind {kind!r} must be one of "
+                f"{FAILURE_KINDS}")
+        if k in out:
+            raise ValueError(f"mixed_weights repeats kind {k!r}")
+        w = float(wgt)
+        if not (math.isfinite(w) and w >= 0.0):
+            raise ValueError(
+                f"mixed_weights[{k!r}] must be a finite weight >= 0, "
+                f"got {wgt!r}")
+        out[k] = w
+    if not out or not any(w > 0.0 for w in out.values()):
+        raise ValueError("mixed_weights needs at least one positive weight")
+    return tuple((k, out[k]) for k in FAILURE_KINDS if k in out)
+
+
 # ---------------------------------------------------------------------------
 # grid + scenarios
 # ---------------------------------------------------------------------------
@@ -351,6 +462,13 @@ class CampaignGrid:
     campaign_seed: int = 0
     max_t0_frac: float = 0.5                 # onset within healthy runtime
     min_dur_frac: float = 0.4                # duration ⊆ healthy runtime
+    # Non-uniform kind weights for 'mixed' draws: a {kind: weight} mapping
+    # (or ((kind, weight), ...) pairs), e.g. {'core': 7, 'link': 3} for the
+    # paper's §IV-A 7:3 core:link population.  A kind's weight is split
+    # uniformly over its placeable resources; kinds absent from the spec
+    # are never drawn.  ``None`` (default) keeps the historical uniform
+    # union-population draw bit-identically.
+    mixed_weights: tuple | dict | None = None
 
     def __post_init__(self):
         # dedupe after normalisation: alias spellings ('core+link' vs
@@ -369,22 +487,34 @@ class CampaignGrid:
                            _expand_severities(self.severities))
         object.__setattr__(self, "n_failures",
                            tuple(int(k) for k in self.n_failures))
+        object.__setattr__(self, "mixed_weights",
+                           _normalise_mixed_weights(self.mixed_weights))
 
-    def _axes_for_kind(self, kind: str) \
-            -> tuple[tuple[float, ...], tuple[int, ...]]:
-        """(severities, n_failures) swept for one kind entry: 'none'
+    def _cells_for_kind(self, kind: str) -> tuple[tuple, ...]:
+        """(severity, n_failures) cells swept for one kind entry: 'none'
         collapses both axes, a composite kind pins n_failures to its
-        component count."""
+        component count, and a per-failure severity mix pins n_failures
+        to its own length (which must agree with a composite kind's pin)."""
         if kind == "none":
-            return (0.0,), (0,)
+            return ((0.0, 0),)
         parts = _kind_parts(kind)
-        if parts:
-            return self.severities, (len(parts),)
-        return self.severities, self.n_failures
+        cells: list[tuple] = []
+        for sev in self.severities:
+            if isinstance(sev, tuple):
+                if parts and len(parts) != len(sev):
+                    raise ValueError(
+                        f"per-failure severity mix {sev!r} assigns "
+                        f"{len(sev)} severities but composite kind "
+                        f"{kind!r} pins {len(parts)} failures")
+                cells.append((sev, len(sev)))
+            elif parts:
+                cells.append((sev, len(parts)))
+            else:
+                cells.extend((sev, nf) for nf in self.n_failures)
+        return tuple(cells)
 
     def n_scenarios(self) -> int:
-        per_deploy = sum(self.reps * len(self._axes_for_kind(k)[0])
-                         * len(self._axes_for_kind(k)[1])
+        per_deploy = sum(self.reps * len(self._cells_for_kind(k))
                          for k in self.kinds)
         return len(self.workloads) * len(self.meshes) * per_deploy
 
@@ -399,7 +529,7 @@ class Scenario:
     mesh_w: int
     mesh_h: int
     kind: str
-    severity: float
+    severity: float | tuple[float, ...]   # tuple = per-failure mix
     n_failures: int        # 0 for 'none' scenarios
     rep: int
 
@@ -410,12 +540,10 @@ def enumerate_scenarios(grid: CampaignGrid) -> list[Scenario]:
     for wl in grid.workloads:
         for w, h in grid.meshes:
             for kind in grid.kinds:
-                sevs, nfs = grid._axes_for_kind(kind)
-                for sev in sevs:
-                    for nf in nfs:
-                        for rep in range(grid.reps):
-                            out.append(Scenario(len(out), wl, w, h, kind,
-                                                sev, nf, rep))
+                for sev, nf in grid._cells_for_kind(kind):
+                    for rep in range(grid.reps):
+                        out.append(Scenario(len(out), wl, w, h, kind,
+                                            sev, nf, rep))
     return out
 
 
@@ -432,7 +560,7 @@ def _kind_key(kind: str) -> int:
         return int.from_bytes(kind.encode().ljust(8, b"\0"), "big")
 
 
-def _severity_key(severity: float) -> int:
+def _severity_key(severity) -> int:
     """The severity's IEEE-754 bit pattern.  Keying on the float's bits
     (not on ``int(severity * 1000)``) keeps severities closer than 1e-3 —
     the near-threshold sweep case — on distinct RNG streams.  The bit
@@ -440,7 +568,17 @@ def _severity_key(severity: float) -> int:
     positive-scenario draws re-keyed at this fix (0.0 still keys to 0;
     'none' draws re-keyed only via the full-name workload fold in
     ``_scenario_rng``, for workload names longer than 8 bytes) — pre-fix
-    campaign recordings are not comparable."""
+    campaign recordings are not comparable.
+
+    A per-failure severity mix folds every component's bit pattern into
+    one arbitrary-precision key (SeedSequence accepts big ints), prefixed
+    with a domain tag so a mix can never collide with a scalar severity's
+    stream."""
+    if isinstance(severity, tuple):
+        key = 1
+        for s in severity:
+            key = (key << 64) | int(np.float64(s).view(np.uint64))
+        return key
     return int(np.float64(severity).view(np.uint64))
 
 
@@ -572,13 +710,15 @@ def _kind_pools(dep: Deployment) -> dict[str, tuple[int, ...]]:
             "link": dep.used_links, "router": dep.used_routers}
 
 
-def _draw_sites(rng: np.random.Generator, s: Scenario,
-                dep: Deployment) -> list[tuple[str, int]]:
+def _draw_sites(rng: np.random.Generator, s: Scenario, dep: Deployment,
+                mixed_weights=None) -> list[tuple[str, int]]:
     """Draw ``s.n_failures`` distinct (kind, location) failure sites.
 
     Homogeneous kinds reproduce the historical draw sequence exactly.
     ``'mixed'`` samples without replacement from the union population of
-    all placeable resources (kind probability ∝ live resource count);
+    all placeable resources — uniformly by default (kind probability ∝
+    live resource count), or with ``mixed_weights`` splitting each kind's
+    weight evenly over its pool (the paper's 7:3 core:link population);
     composite kinds (``'core+link'``) draw one failure per pinned kind,
     distinct within each kind's pool.
     """
@@ -587,15 +727,40 @@ def _draw_sites(rng: np.random.Generator, s: Scenario,
     parts = _kind_parts(s.kind)
     if s.kind == MIXED:
         pools = _kind_pools(dep)
+        if mixed_weights is None:
+            union = [(kind, int(loc)) for kind in FAILURE_KINDS
+                     for loc in pools[kind]]
+            if k > len(union):
+                raise ValueError(
+                    f"cannot place {k} distinct mixed-kind failures: only "
+                    f"{len(union)} placeable resources on {s.workload}@"
+                    f"{s.mesh_w}x{s.mesh_h}")
+            # no p= here: rng.choice consumes the stream differently with
+            # an explicit distribution, and the uniform default must stay
+            # bit-identical to historical draws
+            return [union[int(i)]
+                    for i in rng.choice(len(union), size=k, replace=False)]
+        wmap = dict(mixed_weights)
+        for kind in FAILURE_KINDS:
+            if wmap.get(kind, 0.0) > 0.0 and not pools[kind]:
+                raise ValueError(
+                    f"mixed_weights gives positive weight to {kind!r} but "
+                    f"no {kind}s are placeable on {s.workload}@"
+                    f"{s.mesh_w}x{s.mesh_h} — drop the kind or zero its "
+                    f"weight")
         union = [(kind, int(loc)) for kind in FAILURE_KINDS
-                 for loc in pools[kind]]
+                 if wmap.get(kind, 0.0) > 0.0 for loc in pools[kind]]
         if k > len(union):
             raise ValueError(
                 f"cannot place {k} distinct mixed-kind failures: only "
-                f"{len(union)} placeable resources on {s.workload}@"
-                f"{s.mesh_w}x{s.mesh_h}")
+                f"{len(union)} placeable resources carry positive "
+                f"mixed_weights on {s.workload}@{s.mesh_w}x{s.mesh_h}")
+        probs = np.array([wmap[kind] / len(pools[kind])
+                          for kind, _ in union], dtype=np.float64)
+        probs /= probs.sum()
         return [union[int(i)]
-                for i in rng.choice(len(union), size=k, replace=False)]
+                for i in rng.choice(len(union), size=k, replace=False,
+                                    p=probs)]
     if parts:
         pools = _kind_pools(dep)
         sites: list[tuple[str, int]] = []
@@ -656,18 +821,76 @@ def materialise(grid: CampaignGrid, s: Scenario, dep: Deployment) \
     sim_seed = int(rng.integers(1 << 31))
     if s.kind == "none":
         return (), sim_seed
-    sites = _draw_sites(rng, s, dep)
+    sites = _draw_sites(rng, s, dep, mixed_weights=grid.mixed_weights)
     total = dep.healthy.total_time
+    # a per-failure severity mix assigns severities[i] to the i-th drawn
+    # site (for composite kinds that is the canonicalised component
+    # order); a scalar severity applies uniformly — severity assignment
+    # consumes no RNG, so scalar draws are unchanged
+    if isinstance(s.severity, tuple):
+        sevs = s.severity
+    else:
+        sevs = (s.severity,) * len(sites)
     failures = []
-    for kind, loc in sites:
+    for (kind, loc), sv in zip(sites, sevs):
         t0 = float(rng.uniform(0.0, grid.max_t0_frac * total))
         dur = float(rng.uniform(grid.min_dur_frac, 1.0) * total)
-        failures.append(FailSlow(kind, loc, t0, dur, s.severity))
+        failures.append(FailSlow(kind, loc, t0, dur, float(sv)))
     return tuple(failures), sim_seed
 
 
+def _mitigate_scenario(dep: Deployment, failures, sim: SimResult,
+                       sim_seed: int, verdict, detector_name: str,
+                       policy, switch_time: float | None,
+                       correct: bool) -> MitigationOutcome:
+    """Close the loop for one (detector, policy) pair: plan against the
+    verdict, apply, re-simulate the mitigated deployment over the
+    remaining failure window, and score recovery against the deployment's
+    healthy reference.
+
+    ``switch_time`` — the stream time at which mitigation engaged (the
+    detector's first flagged window): the composed makespan keeps the
+    work already finished by then and runs the remainder at the mitigated
+    deployment's rate (the steady-state approximation for iterative
+    workloads).  ``None`` models a post-hoc restart: the whole workload
+    re-runs on the mitigated deployment under the full failure windows.
+    A plan that does not act re-simulates nothing, so the ``none``
+    control's mitigated makespan equals the failed one *exactly*.
+    """
+    sloth = dep.sloth
+    healthy_t = float(dep.healthy.total_time)
+    failed_t = float(sim.total_time)
+    t0 = _wall_clock()
+    plan = policy.plan(verdict, sloth.mapped, sloth.mesh, sloth.cfg)
+    if not plan.acted:
+        return MitigationOutcome(
+            detector=detector_name, policy=policy.name, acted=False,
+            correct=correct, exclude_cores=(), avoid_links=(),
+            healthy_time=healthy_t, failed_time=failed_t,
+            mitigated_time=failed_t, switch_time=None,
+            wall_time=_wall_clock() - t0)
+    mitigated = policy.apply(plan, sloth.mapped, sloth.cfg)
+    sim_cfg = dataclasses.replace(sloth.sim_cfg, seed=sim_seed)
+    from_t = float(switch_time) if switch_time is not None else 0.0
+    re_sim = simulate_mitigated(mitigated, sim_cfg, list(failures),
+                                probes=sloth.plan.sim_plan,
+                                from_time=from_t)
+    if switch_time is None:
+        mit_t = float(re_sim.total_time)
+    else:
+        done = work_done_frac(sim, from_t)
+        mit_t = from_t + (1.0 - done) * float(re_sim.total_time)
+    return MitigationOutcome(
+        detector=detector_name, policy=policy.name, acted=True,
+        correct=correct, exclude_cores=plan.exclude_cores,
+        avoid_links=plan.avoid_links, healthy_time=healthy_t,
+        failed_time=failed_t, mitigated_time=mit_t,
+        switch_time=switch_time, wall_time=_wall_clock() - t0)
+
+
 def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
-                 streaming: int = 0) -> ScenarioOutcome:
+                 streaming: int = 0,
+                 mitigation: tuple[str, ...] = ()) -> ScenarioOutcome:
     """Execute one scenario end-to-end against a cached deployment: one
     simulation, analysed by every prepared detector, every verdict judged
     by the shared router-aware rule (:func:`repro.core.failures
@@ -680,19 +903,32 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
     scenarios additionally record the detection latency (stream time of
     the first flagged window minus the earliest failure onset; ``inf``
     when never flagged).  Detectors without ``stream_analyse`` fall back
-    to post-hoc analysis with no latency measurement."""
+    to post-hoc analysis with no latency measurement.
+
+    ``mitigation`` names registered policies
+    (:func:`repro.mitigate.get_policy`): each detector's judged verdict is
+    handed to each policy and the mitigated deployment re-simulated (see
+    :func:`_mitigate_scenario`) — one :class:`MitigationOutcome` per
+    (detector, policy) pair, detector-major.  On streaming scenarios the
+    mitigation engages at the detector's first flagged window, so
+    detection latency composes with recovery; post-hoc scenarios model a
+    full restart."""
     failures, sim_seed = materialise(grid, s, dep)
+    policies = [instantiate_policy(p) for p in mitigation]
     t0 = _wall_clock()
     sim = dep.sloth.run(list(failures) if failures else None, seed=sim_seed)
     sim_wall = _wall_clock() - t0
     mesh = dep.sloth.mesh
     results = []
+    mitigations: list[MitigationOutcome] = []
     compression = 0.0
     total_time = float(sim.total_time)
     for det in dep.detectors:
         t1 = _wall_clock()
         latency = None
-        if streaming > 0 and hasattr(det, "stream_analyse"):
+        first_flag = None
+        streamed = streaming > 0 and hasattr(det, "stream_analyse")
+        if streamed:
             v, first_flag = det.stream_analyse(sim, n_chunks=streaming)
             if failures:
                 onset = min(f.t0 for f in failures)
@@ -709,6 +945,12 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
             pred_location=v.location, score=float(v.score),
             matched=matched, truth_rank=rank, truth_ranks=ranks,
             wall_time=wall, detection_latency=latency))
+        switch = (float(first_flag) if streamed and first_flag is not None
+                  else None)
+        for pol in policies:
+            mitigations.append(_mitigate_scenario(
+                dep, failures, sim, sim_seed, v, det.name, pol,
+                switch, matched))
     return ScenarioOutcome(
         scenario_id=s.scenario_id, workload=s.workload,
         mesh_w=s.mesh_w, mesh_h=s.mesh_h, kind=s.kind,
@@ -718,7 +960,9 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
         truth_t0s=tuple(f.t0 for f in failures),
         truth_durations=tuple(f.duration for f in failures),
         truth_kinds=tuple(f.kind for f in failures),
+        truth_severities=tuple(f.slowdown for f in failures),
         detector_results=tuple(results),
+        mitigation_results=tuple(mitigations),
         compression_ratio=compression,
         total_time=total_time,
         probe_overhead=float(dep.probe_overhead),
@@ -728,17 +972,26 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
 
 def _run_in_worker(grid: CampaignGrid, cfg: SlothConfig | None,
                    detectors: tuple[str, ...], streaming: int,
+                   mitigation: tuple[str, ...],
                    s: Scenario) -> ScenarioOutcome:
     """Process-pool entry point: resolve the deployment from this worker
     process's own cache (lazily built), then run the scenario."""
     dep = _WORKER_CACHE.get(s.workload, s.mesh_w, s.mesh_h,
                             cfg=cfg, detectors=detectors)
-    return run_scenario(grid, s, dep, streaming=streaming)
+    return run_scenario(grid, s, dep, streaming=streaming,
+                        mitigation=mitigation)
 
 
 # ---------------------------------------------------------------------------
 # campaign driver
 # ---------------------------------------------------------------------------
+
+def _sev_str(sev) -> str:
+    """Render a severity cell — scalar or per-failure mix — for tables."""
+    if isinstance(sev, tuple):
+        return "(" + ",".join(f"{s:g}" for s in sev) + ")"
+    return f"{sev:g}"
+
 
 @dataclasses.dataclass
 class CampaignResult:
@@ -750,6 +1003,11 @@ class CampaignResult:
     detector_metrics: dict[str, CampaignMetrics]
     detector_cells: dict[str, dict[tuple, CampaignMetrics]]
     probe_overheads: dict[tuple, float]    # (workload, w, h) → overhead
+    # mitigation request + recovered-throughput table, empty on campaigns
+    # without ``mitigation=``
+    policies: tuple[str, ...] = ()
+    mitigation: dict[tuple[str, str], MitigationStat] = \
+        dataclasses.field(default_factory=dict)
 
     def severity_curve(self, detector: str | None = None,
                        ks: tuple[int, ...] = (1, 3, 5)) \
@@ -758,6 +1016,14 @@ class CampaignResult:
         with Wilson CIs — the near-threshold sweep readout for one
         detector (``None`` → primary)."""
         return severity_curve(self.outcomes, ks=ks, detector=detector)
+
+    def severity_curve_by_mesh(self, detector: str | None = None,
+                               ks: tuple[int, ...] = (1, 3, 5)) \
+            -> dict[tuple[int, int], tuple[SeverityPoint, ...]]:
+        """The severity curve split per mesh size (``(w, h)`` keys) —
+        near-threshold behaviour per topology scale instead of pooled."""
+        return severity_curve_by_mesh(self.outcomes, ks=ks,
+                                      detector=detector)
 
     def by_truth_kind(self, detector: str | None = None,
                       ks: tuple[int, ...] = (1, 3, 5)) \
@@ -806,11 +1072,25 @@ class CampaignResult:
                     f"{dm.topk_rate(3)*100:6.2f}% "
                     f"{dm.recall_at(3)*100:6.2f}%")
         if len({o.severity for o in self.outcomes if o.positive}) > 1:
-            lines.append("severity curve (accuracy / recall@3):")
-            for p in self.severity_curve():
-                lines.append(
-                    f"  x{p.severity:<8.6g} {p.accuracy.pct():6.2f}% "
-                    f"{p.recall_at(3)*100:6.2f}%  (n={p.n_scenarios})")
+            by_mesh = self.severity_curve_by_mesh()
+            if len(by_mesh) > 1:
+                lines.append("severity curve per mesh "
+                             "(accuracy / recall@3):")
+                for (w, h), pts in by_mesh.items():
+                    lines.append(f"  {w}x{h}:")
+                    for p in pts:
+                        lines.append(
+                            f"    x{_sev_str(p.severity):<8s} "
+                            f"{p.accuracy.pct():6.2f}% "
+                            f"{p.recall_at(3)*100:6.2f}%  "
+                            f"(n={p.n_scenarios})")
+            else:
+                lines.append("severity curve (accuracy / recall@3):")
+                for p in self.severity_curve():
+                    lines.append(
+                        f"  x{_sev_str(p.severity):<8s} "
+                        f"{p.accuracy.pct():6.2f}% "
+                        f"{p.recall_at(3)*100:6.2f}%  (n={p.n_scenarios})")
         kinds = self.by_truth_kind()
         if len(kinds) > 1:
             lines.append("per truth kind (recall@1 / recall@3 / "
@@ -822,6 +1102,22 @@ class CampaignResult:
                     f"  {kind:8s} {tk.recall_at(1)*100:6.2f}% "
                     f"{tk.recall_at(3)*100:6.2f}% {rank}  "
                     f"(n={tk.n_failures})")
+        if self.mitigation:
+            lines.append("mitigation (acted / recovered / slowdown vs "
+                         "healthy / mis-mitigation):")
+            for (det, pol), st in self.mitigation.items():
+                ci = st.improved.interval
+                lines.append(
+                    f"  {det}x{pol:<11s} "
+                    f"acted {st.acted.successes}/{st.acted.trials}  "
+                    f"recovered {st.recovered_mean*100:6.1f}% "
+                    f"(improved {st.improved.successes}/"
+                    f"{st.improved.trials}, CI [{ci[0]*100:.0f}, "
+                    f"{ci[1]*100:.0f}])  "
+                    f"slowdown {st.slowdown_mean:.3f}x  "
+                    f"mis-acted {st.mis_acted.successes}/"
+                    f"{st.mis_acted.trials} "
+                    f"penalty {st.penalty_mean*100:+.1f}%")
         wall = wall_time_stats(self.outcomes)
         if wall:
             lines.append("wall time per scenario (mean / p95):")
@@ -841,6 +1137,7 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
                  detectors=("sloth",),
                  baselines: bool | None = None,
                  streaming: bool | int = False,
+                 mitigation=None,
                  cache: DeploymentCache | None = None,
                  progress=None) -> CampaignResult:
     """Run every scenario of ``grid`` and aggregate paper-style metrics.
@@ -860,9 +1157,17 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
     judged verdicts are unchanged (the final streamed verdict equals the
     post-hoc one by construction), and positive scenarios additionally
     report detection latency (``metrics.detection``; see
-    :func:`run_scenario`).  ``cache`` — share deployments across
-    campaigns (defaults to a process-wide cache; ignored by process-pool
-    workers, which keep their own).
+    :func:`run_scenario`).  ``mitigation`` — registered mitigation-policy
+    names (a name, an iterable, or ``None``): every detector's judged
+    verdict is acted on by every policy and the mitigated deployment
+    re-simulated over the remaining failure window, producing the
+    recovered-throughput table in ``result.mitigation`` (per
+    (detector, policy), Wilson CIs; see
+    :func:`repro.core.metrics.mitigation_stats`).  With streaming, the
+    mitigation engages at each detector's first flagged window, so
+    detection latency composes with recovery.  ``cache`` — share
+    deployments across campaigns (defaults to a process-wide cache;
+    ignored by process-pool workers, which keep their own).
     """
     if executor not in EXECUTORS:
         raise ValueError(f"unknown executor {executor!r}; "
@@ -873,6 +1178,7 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
     if streaming < 0:
         raise ValueError("streaming must be False or a chunk count >= 1")
     names = _normalise_detectors(detectors, baselines)
+    pols = _normalise_policies(mitigation)
     scenarios = enumerate_scenarios(grid)
     workers = (os.cpu_count() or 1) if workers is None else workers
     parallel = workers > 1 and len(scenarios) > 1
@@ -882,7 +1188,8 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
         # thread pools make fork() after first use prone to deadlock.
         # Workers re-import the package cleanly (sys.path is inherited).
         ctx = multiprocessing.get_context("spawn")
-        fn = functools.partial(_run_in_worker, grid, cfg, names, streaming)
+        fn = functools.partial(_run_in_worker, grid, cfg, names, streaming,
+                               pols)
         outcomes = []
         with ProcessPoolExecutor(max_workers=workers,
                                  mp_context=ctx) as pool:
@@ -905,7 +1212,7 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
         def run_one(s: Scenario) -> ScenarioOutcome:
             o = run_scenario(grid, s,
                              deps[(s.workload, s.mesh_w, s.mesh_h)],
-                             streaming=streaming)
+                             streaming=streaming, mitigation=pols)
             if progress is not None:
                 progress(o)
             return o
@@ -926,4 +1233,6 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
         detector_metrics=det_metrics,
         detector_cells=det_cells,
         probe_overheads=deployment_overheads(outcomes),
+        policies=pols,
+        mitigation=by_mitigation(outcomes),
     )

@@ -72,17 +72,28 @@ def _n_parts_for(flops: float, median_flops: float, n_cores: int) -> int:
 
 
 def map_graph(graph: CompGraph, mesh: Mesh2D, shuffle_fanin: int = 2,
-              seed: int = 0, max_parts: int | None = None) -> MappedGraph:
+              seed: int = 0, max_parts: int | None = None,
+              exclude_cores=()) -> MappedGraph:
     """Partition every operator into volume-equivalent parts on the mesh.
 
     ``shuffle_fanin`` extra producers per consumer part model the tensor
     re-layout traffic between differently partitioned stages; ``max_parts``
     caps spatial spreading (Gemini trades spreading against locality).
+    ``exclude_cores`` drops cores from the placement pool (the mitigation
+    path: remap the workload off verdict-flagged cores); with an empty
+    exclusion the placement arithmetic is unchanged bit-for-bit.
     """
     rng = np.random.default_rng(seed)
     comp = [n.flops for n in graph.nodes if n.flops > 0]
     median_flops = float(np.median(comp)) if comp else 1.0
-    n_cores = mesh.n_cores
+    excluded = frozenset(int(c) for c in exclude_cores)
+    bad = sorted(excluded.difference(range(mesh.n_cores)))
+    if bad:
+        raise ValueError(f"exclude_cores out of range for mesh: {bad}")
+    alive = [c for c in range(mesh.n_cores) if c not in excluded]
+    if not alive:
+        raise ValueError("exclude_cores removes every core in the mesh")
+    n_cores = len(alive)
 
     tasks: list[Task] = []
     node_tasks: dict[int, list[int]] = {}
@@ -99,7 +110,7 @@ def map_graph(graph: CompGraph, mesh: Mesh2D, shuffle_fanin: int = 2,
         offset = (node.node_id * 7) % n_cores
         ids = []
         for part in range(p):
-            core = (offset + part * (n_cores // p)) % n_cores
+            core = alive[(offset + part * (n_cores // p)) % n_cores]
             t = Task(len(tasks), nid, part, p, core, node.flops / p,
                      node.stage, node.op_type)
             tasks.append(t)

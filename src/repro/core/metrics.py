@@ -27,9 +27,13 @@ kind-tuple entries): ``truth_kinds`` records each injected failure's kind
 index-aligned with the other truth tuples, and :func:`by_truth_kind`
 splits per-failure recall@k and rank statistics by that kind — so a mixed
 campaign reports how well each detector localises core vs link vs router
-root causes *within heterogeneous scenarios*.  :func:`severity_curve`
-slices positives by injected severity (accuracy / recall@k per severity,
-negatives' FPR alongside) for near-threshold sweeps.  The aggregates are:
+root causes *within heterogeneous scenarios*.  Severity may likewise vary
+per failure (``truth_severities`` / ``effective_truth_severities``, set by
+the grid's per-failure severity tuples).  :func:`severity_curve` slices
+positives by injected severity (accuracy / recall@k per severity,
+negatives' FPR alongside) for near-threshold sweeps, and
+:func:`severity_curve_by_mesh` splits the same curve per mesh size.  The
+aggregates are:
 
 * **accuracy (any-match)** — fraction of *positive* scenarios whose top-1
   verdict names any of the injected root causes (router failures accept any
@@ -49,6 +53,14 @@ negatives' FPR alongside) for near-threshold sweeps.  The aggregates are:
   ``None`` (not streamed / negative), ``inf`` (streamed, never flagged)
   or finite (detected); it is simulated time, hence deterministic and
   part of outcome equality,
+* **recovered throughput** — on mitigated campaigns
+  (``run_campaign(mitigation=...)``), each (detector, policy) cell's
+  :class:`MitigationOutcome` per scenario reduces via
+  :func:`by_mitigation` to a :class:`MitigationStat`: post-mitigation
+  slowdown vs healthy, the fraction of the failure-induced gap recovered
+  under correct verdicts, and the mis-mitigation penalty paid when the
+  policy acted on a wrong or false verdict — all binomial rates with
+  Wilson CIs,
 * **compression ratio** and **probe overhead** means.  Probe overhead is
   a per-deployment quantity; the headline mean weights each deployment by
   the number of scenarios it served (``mean_probe_overhead``), with the
@@ -97,6 +109,67 @@ class DetectorOutcome:
 
 
 @dataclasses.dataclass(frozen=True)
+class MitigationOutcome:
+    """One (detector, policy) mitigation attempt for one scenario.
+
+    Produced by ``run_campaign(mitigation=...)``: the policy planned
+    against the detector's verdict, the plan was applied, and the
+    mitigated deployment was re-simulated over the remaining failure
+    window.  ``correct`` is the judged correctness of the *acted-on
+    verdict* (router-aware top-1 match for positives, not-flagged for
+    negatives) — so wrong/false verdicts can be sliced out to measure the
+    mis-mitigation penalty.  ``switch_time`` is the simulated stream time
+    at which mitigation engaged (first streaming flag); ``None`` models a
+    post-hoc restart over the full window.  All times are simulated and
+    deterministic; ``wall_time`` (plan+apply+re-simulate seconds) is
+    telemetry, excluded from equality.
+    """
+    detector: str
+    policy: str
+    acted: bool                # the plan edited the deployment
+    correct: bool              # the verdict acted on was judged correct
+    exclude_cores: tuple[int, ...]
+    avoid_links: tuple[int, ...]
+    healthy_time: float        # failure-free makespan (probed reference)
+    failed_time: float         # un-mitigated makespan under the failures
+    mitigated_time: float      # makespan after mitigation (== failed when
+    #                            the policy did not act)
+    switch_time: float | None = None
+    wall_time: float = dataclasses.field(default=0.0, compare=False)
+
+    @property
+    def gap(self) -> float:
+        """Failure-induced throughput gap (seconds lost to the failure)."""
+        return self.failed_time - self.healthy_time
+
+    @property
+    def recovered_frac(self) -> float:
+        """Fraction of the failure-induced gap the mitigation clawed back:
+        1.0 = back to healthy, 0.0 = no change, negative = made it worse.
+        Defined as 0.0 when there is no gap to recover."""
+        gap = self.gap
+        if gap <= 0.0:
+            return 0.0
+        return (self.failed_time - self.mitigated_time) / gap
+
+    @property
+    def slowdown_vs_healthy(self) -> float:
+        """Post-mitigation makespan relative to the healthy reference."""
+        if self.healthy_time <= 0.0:
+            return 0.0
+        return self.mitigated_time / self.healthy_time
+
+    @property
+    def penalty(self) -> float:
+        """Relative slowdown *introduced* by acting: positive only when
+        mitigation made the run slower than leaving the failure alone —
+        the cost of acting on a wrong or false verdict."""
+        if self.failed_time <= 0.0:
+            return 0.0
+        return max(0.0, self.mitigated_time / self.failed_time - 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
 class ScenarioOutcome:
     """Result of one campaign scenario (the exchange record between the
     runner and the aggregators).  Picklable: plain scalars, tuples and
@@ -111,7 +184,10 @@ class ScenarioOutcome:
     # 'core' | 'link' | 'router' | 'none' | 'mixed' | 'core+link'-style
     # composites (per-failure kinds are in truth_kinds)
     kind: str
-    severity: float            # injected slowdown (0.0 for 'none')
+    # injected slowdown (0.0 for 'none'); a tuple for per-failure severity
+    # mixes (the grid's explicit-tuple severity entries, e.g. a 1.5× core
+    # with a 10× link in one scenario — see ``truth_severities``)
+    severity: float | tuple[float, ...]
     n_failures: int            # simultaneous injected failures (0 = 'none')
     rep: int                   # replicate index within the grid cell
     sim_seed: int              # simulator seed actually used
@@ -132,6 +208,13 @@ class ScenarioOutcome:
     # negatives and for outcomes predating the mixed-kind axis (see
     # ``effective_truth_kinds``)
     truth_kinds: tuple[str, ...] = ()
+    # per-failure injected slowdowns, index-aligned with truth_locations;
+    # empty for negatives and for outcomes predating per-failure severity
+    # mixes (see ``effective_truth_severities``)
+    truth_severities: tuple[float, ...] = ()
+    # one mitigation attempt per (detector, policy) pair, detector-major
+    # in request order; empty on campaigns without ``mitigation=``
+    mitigation_results: tuple[MitigationOutcome, ...] = ()
 
     @property
     def positive(self) -> bool:
@@ -145,6 +228,18 @@ class ScenarioOutcome:
         if self.truth_kinds:
             return self.truth_kinds
         return (self.kind,) * len(self.truth_locations)
+
+    @property
+    def effective_truth_severities(self) -> tuple[float, ...]:
+        """Per-failure severities with the uniform-severity fallback:
+        outcomes from scalar-severity scenarios (or synthesised without
+        ``truth_severities``) report every failure at the scenario's own
+        severity."""
+        if self.truth_severities:
+            return self.truth_severities
+        if isinstance(self.severity, tuple):
+            return tuple(float(s) for s in self.severity)
+        return (float(self.severity),) * len(self.truth_locations)
 
     # -- primary-detector convenience views --------------------------------
     @property
@@ -211,6 +306,18 @@ class ScenarioOutcome:
             f"scenario {self.scenario_id} carries no verdict for "
             f"detector {detector!r}; ran: "
             f"{tuple(d.detector for d in self.detector_results)}")
+
+    def mitigation_for(self, detector: str,
+                       policy: str) -> MitigationOutcome:
+        """This scenario's :class:`MitigationOutcome` for one
+        (detector, policy) cell."""
+        for m in self.mitigation_results:
+            if m.detector == detector and m.policy == policy:
+                return m
+        raise KeyError(
+            f"scenario {self.scenario_id} carries no mitigation outcome "
+            f"for ({detector!r}, {policy!r}); ran: "
+            f"{tuple((m.detector, m.policy) for m in self.mitigation_results)}")
 
     def cell(self) -> tuple:
         return (self.workload, self.mesh_w, self.mesh_h, self.kind,
@@ -451,6 +558,100 @@ def detector_cells(outcomes: list[ScenarioOutcome],
             for name in detectors_in(outcomes)}
 
 
+#: Materiality floor for recovered-throughput means: positives whose
+#: failure-induced gap is below this fraction of the healthy makespan are
+#: excluded from ``recovered_mean``/``improved`` (a near-zero gap turns the
+#: recovered fraction into amplified simulator noise), but still count in
+#: ``acted`` and the slowdown mean.
+MIN_GAP_FRAC = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MitigationStat:
+    """Recovered-throughput summary for one (detector, policy) cell.
+
+    Three populations, judged by the verdict the policy acted on:
+
+    * *correct positives* (failure present, verdict matched) with a
+      material gap feed ``improved`` (mitigated < failed, Wilson CI) and
+      ``recovered_mean`` — the headline "fraction of the failure-induced
+      gap recovered under correct verdicts";
+    * *wrong/false verdicts* (mismatched positives + false-flagged
+      negatives) feed ``mis_acted`` (the policy acted on bad information),
+      ``worsened`` (acting made the run slower than the failure alone) and
+      ``penalty_mean`` — the mis-mitigation cost;
+    * all positives feed ``slowdown_mean`` (post-mitigation makespan vs
+      healthy, 1.0 = full recovery).
+    """
+    detector: str
+    policy: str
+    n_positive: int
+    n_negative: int
+    acted: BinomialStat        # plans that edited the deployment, over all
+    improved: BinomialStat     # correct material positives: mitigated < failed
+    recovered_mean: float      # mean recovered_frac over that population
+    slowdown_mean: float       # mean mitigated/healthy over positives
+    mis_acted: BinomialStat    # wrong/false verdicts where the policy acted
+    worsened: BinomialStat     # acted wrong/false: mitigated > failed
+    penalty_mean: float        # mean penalty over acted wrong/false
+
+
+def mitigations_in(outcomes: list[ScenarioOutcome]) \
+        -> tuple[tuple[str, str], ...]:
+    """(detector, policy) pairs present in ``outcomes``, in request order
+    (detector-major)."""
+    return (tuple((m.detector, m.policy)
+                  for m in outcomes[0].mitigation_results)
+            if outcomes else ())
+
+
+def mitigation_stats(outcomes: list[ScenarioOutcome], detector: str,
+                     policy: str) -> MitigationStat:
+    """Reduce one (detector, policy) cell to a :class:`MitigationStat`."""
+    pos: list[MitigationOutcome] = []
+    neg: list[MitigationOutcome] = []
+    for o in outcomes:
+        for m in o.mitigation_results:
+            if m.detector == detector and m.policy == policy:
+                (pos if o.positive else neg).append(m)
+    all_m = pos + neg
+    material = [m for m in pos if m.correct
+                and m.gap > MIN_GAP_FRAC * m.healthy_time]
+    wrong = [m for m in pos + neg if not m.correct]
+    wrong_acted = [m for m in wrong if m.acted]
+    slowdowns = [m.slowdown_vs_healthy for m in pos]
+    recovered = [m.recovered_frac for m in material]
+    penalties = [m.penalty for m in wrong_acted]
+    return MitigationStat(
+        detector=detector,
+        policy=policy,
+        n_positive=len(pos),
+        n_negative=len(neg),
+        acted=BinomialStat(sum(m.acted for m in all_m), len(all_m)),
+        improved=BinomialStat(
+            sum(m.mitigated_time < m.failed_time for m in material),
+            len(material)),
+        recovered_mean=(sum(recovered) / len(recovered)) if recovered
+        else 0.0,
+        slowdown_mean=(sum(slowdowns) / len(slowdowns)) if slowdowns
+        else 0.0,
+        mis_acted=BinomialStat(len(wrong_acted), len(wrong)),
+        worsened=BinomialStat(
+            sum(m.mitigated_time > m.failed_time for m in wrong_acted),
+            len(wrong_acted)),
+        penalty_mean=(sum(penalties) / len(penalties)) if penalties
+        else 0.0,
+    )
+
+
+def by_mitigation(outcomes: list[ScenarioOutcome]) \
+        -> dict[tuple[str, str], MitigationStat]:
+    """Per-(detector, policy) recovered-throughput table, in request
+    order — the detect → mitigate analogue of :func:`by_detector`."""
+    return {pair: mitigation_stats(outcomes, *pair)
+            for pair in mitigations_in(outcomes)}
+
+
 @dataclasses.dataclass(frozen=True)
 class TruthKindMetrics:
     """Per-failure statistics for the injected failures of one truth kind
@@ -510,7 +711,7 @@ class SeverityPoint:
     positive scenarios injected at exactly this severity.  ``fpr`` is the
     campaign's negative-sample rate (negatives collapse the severity axis,
     so the same reference stat is attached to every point)."""
-    severity: float
+    severity: float | tuple[float, ...]   # tuple for per-failure mixes
     n_scenarios: int
     accuracy: BinomialStat          # any-match over this slice's positives
     fpr: BinomialStat               # campaign negatives (shared reference)
@@ -532,12 +733,18 @@ def severity_curve(outcomes: list[ScenarioOutcome],
     neg = [o for o in outcomes if not o.positive]
     fpr = BinomialStat(sum(o.result_for(detector).flagged for o in neg),
                        len(neg))
-    by_sev: dict[float, list[ScenarioOutcome]] = {}
+    by_sev: dict[float | tuple, list[ScenarioOutcome]] = {}
     for o in outcomes:
         if o.positive:
-            by_sev.setdefault(float(o.severity), []).append(o)
+            key = (tuple(float(s) for s in o.severity)
+                   if isinstance(o.severity, tuple) else float(o.severity))
+            by_sev.setdefault(key, []).append(o)
     points = []
-    for sev in sorted(by_sev):
+    # scalar severities first (ascending), then per-failure severity
+    # tuples (lexicographic)
+    for sev in sorted(by_sev, key=lambda s: (isinstance(s, tuple),
+                                             s if isinstance(s, tuple)
+                                             else (s,))):
         outs = by_sev[sev]
         acc = BinomialStat(
             sum(o.result_for(detector).matched for o in outs), len(outs))
@@ -552,6 +759,21 @@ def severity_curve(outcomes: list[ScenarioOutcome],
             severity=sev, n_scenarios=len(outs), accuracy=acc, fpr=fpr,
             recall=tuple((k, BinomialStat(hits[k], trials)) for k in ks)))
     return tuple(points)
+
+
+def severity_curve_by_mesh(outcomes: list[ScenarioOutcome],
+                           ks: tuple[int, ...] = (1, 3, 5),
+                           detector: str | None = None) \
+        -> dict[tuple[int, int], tuple[SeverityPoint, ...]]:
+    """:func:`severity_curve` split per mesh size, keyed ``(w, h)`` in
+    first-occurrence order — near-threshold behaviour per topology scale
+    instead of pooled over every mesh.  Each mesh's FPR reference uses
+    that mesh's own negatives."""
+    groups: dict[tuple[int, int], list[ScenarioOutcome]] = {}
+    for o in outcomes:
+        groups.setdefault((o.mesh_w, o.mesh_h), []).append(o)
+    return {m: severity_curve(v, ks=ks, detector=detector)
+            for m, v in groups.items()}
 
 
 def wall_time_stats(outcomes: list[ScenarioOutcome]) \

@@ -30,6 +30,11 @@ class Mesh2D:
                         links.append((u, v))
         self.links: list[tuple[int, int]] = links
         self.n_links = len(links)
+        # adjacency in link-id order: _adj[u] = [(v, link_id), ...] — the
+        # deterministic exploration order for route_avoiding's BFS.
+        self._adj: list[list[tuple[int, int]]] = [[] for _ in range(self.n_cores)]
+        for lid, (u, v) in enumerate(links):
+            self._adj[u].append((v, lid))
 
     # -- coordinates -------------------------------------------------------
     def core_id(self, x: int, y: int) -> int:
@@ -45,6 +50,10 @@ class Mesh2D:
         """All links adjacent to ``core``'s router (in and out)."""
         return [lid for lid, (u, v) in enumerate(self.links)
                 if u == core or v == core]
+
+    def neighbours(self, core: int) -> list[int]:
+        """4-neighbour core ids, ascending."""
+        return sorted(v for v, _ in self._adj[core])
 
     # -- routing -----------------------------------------------------------
     def route(self, src: int, dst: int) -> list[int]:
@@ -67,6 +76,39 @@ class Mesh2D:
             y = ny_
         return path
 
+    def route_avoiding(self, src: int, dst: int,
+                       avoid: frozenset[int] | set[int]) -> list[int] | None:
+        """Shortest link-id path from ``src`` to ``dst`` avoiding ``avoid``.
+
+        Deterministic breadth-first search: neighbours are explored in
+        link-id order and each core keeps its first-discovered predecessor,
+        so ties between equal-length detours always break the same way.
+        Returns ``None`` when ``avoid`` disconnects the pair.
+        """
+        if src == dst:
+            return []
+        prev: dict[int, tuple[int, int] | None] = {src: None}
+        frontier = [src]
+        while frontier and dst not in prev:
+            nxt = []
+            for u in frontier:
+                for v, lid in self._adj[u]:
+                    if lid in avoid or v in prev:
+                        continue
+                    prev[v] = (u, lid)
+                    nxt.append(v)
+            frontier = nxt
+        if dst not in prev:
+            return None
+        path: list[int] = []
+        c = dst
+        while prev[c] is not None:
+            u, lid = prev[c]        # type: ignore[misc]
+            path.append(lid)
+            c = u
+        path.reverse()
+        return path
+
     def hops(self, src: int, dst: int) -> int:
         x0, y0 = self.coords(src)
         x1, y1 = self.coords(dst)
@@ -79,3 +121,31 @@ class Mesh2D:
             for lid in self.route(s, d):
                 A[i, lid] = 1.0
         return A
+
+
+class DetourMesh(Mesh2D):
+    """A mesh whose ``route()`` detours around a set of avoided links.
+
+    Link identities (ids, count, ``links_of_router``) are unchanged — only
+    path selection differs, so the simulator, recorder and detectors keep one
+    shared link numbering across the un-mitigated and mitigated deployments.
+    Pairs that the avoided set disconnects fall back to the base XY route
+    (the traffic still has to flow; it just keeps paying the slow link).
+    """
+
+    def __init__(self, base: Mesh2D, avoid_links=()):
+        super().__init__(base.width, base.height)
+        self.avoid: frozenset[int] = frozenset(int(l) for l in avoid_links)
+        self._route_cache: dict[tuple[int, int], list[int]] = {}
+
+    def route(self, src: int, dst: int) -> list[int]:
+        if src == dst:
+            return []
+        key = (src, dst)
+        path = self._route_cache.get(key)
+        if path is None:
+            path = self.route_avoiding(src, dst, self.avoid)
+            if path is None:
+                path = super().route(src, dst)
+            self._route_cache[key] = path
+        return path

@@ -234,14 +234,16 @@ class Sloth:
         return self.analyse(self.run(failures=failures, seed=seed))
 
     # -- streaming -----------------------------------------------------------
-    def stream(self):
+    def stream(self, policy=None):
         """A fresh :class:`~repro.core.streaming.SlothStream` bound to
-        this pipeline (one incremental Verdict per observed chunk)."""
+        this pipeline (one incremental Verdict per observed chunk).
+        ``policy`` — a registered mitigation-policy name or instance —
+        arms the stream to plan a mitigation at the first flag."""
         from .streaming import SlothStream
-        return SlothStream(self)
+        return SlothStream(self, policy=policy)
 
-    def stream_analyse(self, sim: SimResult, n_chunks: int = 4) \
-            -> tuple[Verdict, float | None]:
+    def stream_analyse(self, sim: SimResult, n_chunks: int = 4,
+                       policy=None) -> tuple[Verdict, float | None]:
         """Replay a finished trace through the streaming service.
 
         Splits ``sim`` into ``n_chunks`` time-ordered chunks
@@ -251,9 +253,11 @@ class Sloth:
         verdict equals post-hoc :meth:`analyse` of the same trace
         exactly (same impl, same cumulative sketch state);
         ``first_flag_time`` is the stream time of the earliest flagged
-        window (``None`` if no window flagged)."""
+        window (``None`` if no window flagged).  ``policy`` arms
+        mid-stream mitigation planning (see :meth:`stream`) without
+        changing the return shape."""
         from .streaming import split_sim
-        st = self.stream()
+        st = self.stream(policy=policy)
         chunks = split_sim(sim, n_chunks)
         v = None
         for i, chunk in enumerate(chunks):
@@ -286,15 +290,16 @@ class SlothDetector:
             raise RuntimeError("SlothDetector.analyse before prepare()")
         return self.pipeline.analyse(sim)
 
-    def stream_analyse(self, sim: SimResult, n_chunks: int = 4) \
-            -> tuple[Verdict, float | None]:
+    def stream_analyse(self, sim: SimResult, n_chunks: int = 4,
+                       policy=None) -> tuple[Verdict, float | None]:
         """Streaming protocol hook: detectors exposing this method are
         driven chunk-by-chunk on the campaign's ``streaming=`` axis and
         report detection latency (see ``campaign.run_scenario``)."""
         if self.pipeline is None:
             raise RuntimeError("SlothDetector.stream_analyse before "
                                "prepare()")
-        return self.pipeline.stream_analyse(sim, n_chunks=n_chunks)
+        return self.pipeline.stream_analyse(sim, n_chunks=n_chunks,
+                                            policy=policy)
 
 
 _register_builtin("sloth", SlothDetector)

@@ -262,9 +262,18 @@ class SlothStream:
     ``first_flag_time`` records the stream time of the first flagged
     verdict (``None`` until one fires) — subtracting the failure onset
     gives the detection latency.
+
+    ``policy`` (a registered mitigation-policy name or a
+    :class:`~repro.mitigate.policy.MitigationPolicy` instance) closes the
+    detect → mitigate loop mid-stream: at the first flagged verdict the
+    policy plans against it, and the plan plus its stream time land in
+    ``mitigation_plan`` / ``mitigation_time`` for the operator (or the
+    campaign's mid-stream re-simulation) to act on.  Planning happens
+    exactly once — later flags never revise the plan, mirroring a real
+    restart-once deployment.
     """
 
-    def __init__(self, pipeline):
+    def __init__(self, pipeline, policy=None):
         cfg = pipeline.cfg
         self.pipeline = pipeline
         self.recorder = StreamingRecorder(
@@ -272,6 +281,13 @@ class SlothStream:
             hop_latency=pipeline.sim_cfg.hop_latency,
             impl=cfg.recorder_impl,
             budget_kb=getattr(cfg, "budget_kb", 256.0))
+        if isinstance(policy, str):
+            # deferred import: mitigate imports core, not the reverse
+            from ..mitigate.policy import instantiate_policy
+            policy = instantiate_policy(policy)
+        self.policy = policy
+        self.mitigation_plan = None
+        self.mitigation_time: float | None = None
         self.verdicts: list = []
         self.first_flag_time: float | None = None
 
@@ -287,6 +303,12 @@ class SlothStream:
         v = self.pipeline.analyse_recorded(self.recorder.output(), t)
         if v.flagged and self.first_flag_time is None:
             self.first_flag_time = t
+            if self.policy is not None:
+                self.mitigation_plan = self.policy.plan(
+                    v, self.pipeline.mapped, self.pipeline.mesh,
+                    self.pipeline.cfg)
+                if self.mitigation_plan.acted:
+                    self.mitigation_time = t
         self.verdicts.append(v)
         return v
 

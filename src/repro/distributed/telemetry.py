@@ -21,9 +21,13 @@ telemetry:
     :class:`StepTelemetry` bridges a real training/serving loop's
     measured per-step wall times into those windows — the wiring behind
     ``launch/train.py --telemetry`` and ``launch/serve.py --telemetry``;
-  * ``MitigationPolicy`` turns verdicts into actions: data-shard rebalance
-    for mild degradation, checkpoint-restart excluding the failed host for
-    severe/persistent degradation (elastic re-mesh).
+  * ``PodMitigationPolicy`` turns verdicts into actions: data-shard
+    rebalance for mild degradation, checkpoint-restart excluding the failed
+    host for severe/persistent degradation (elastic re-mesh).  Severe plans
+    are expressed through the shared mitigation registry
+    (:mod:`repro.mitigate`): remap for slow chips, reroute for degraded
+    ICI links — the same policies the campaign's recovered-throughput
+    axis judges.
 """
 
 from __future__ import annotations
@@ -33,6 +37,7 @@ import dataclasses
 import numpy as np
 
 from ..core.detection import detect_cores, detect_links
+from ..core.detectors import Verdict
 from ..core.failrank import FailRankParams, attribute_links, failrank
 from ..core.failures import FailSlow
 from ..core.mcg import build_mcg
@@ -267,25 +272,53 @@ class PodDetector:
 
 
 @dataclasses.dataclass
-class MitigationPolicy:
-    """Turns verdicts into launcher actions.
+class PodMitigationPolicy:
+    """Turns pod verdicts into launcher actions.
 
     * rebalance: shrink the slow chip's data shard (returns per-shard
       weights for the pipeline);
     * exclude_and_restart: drop the host from the mesh and restart from the
       last checkpoint with a re-sharded (elastic) configuration.
+
+    Severe plans go through the shared mitigation registry
+    (:mod:`repro.mitigate`) when the pod ``mesh`` is known: the pod *is*
+    the mitigation mesh (chips ↔ cores, ICI links ↔ NoC links), so the
+    plan dict also carries the registry policy's resource edits —
+    ``exclude_cores`` / ``avoid_links`` plus the raw
+    :class:`~repro.mitigate.policy.MitigationPlan` — for the elastic
+    re-mesh restart to apply (remap for slow chips, reroute for degraded
+    ICI links).  ``mesh=None`` (the legacy constructor shape) returns the
+    action keys alone.
     """
     n_shards: int
+    mesh: Mesh2D | None = None
 
-    def plan(self, verdict: PodVerdict):
+    def plan(self, verdict: PodVerdict) -> dict:
         if not verdict.flagged:
             return {"action": "none"}
         if verdict.action == "rebalance" and verdict.kind == "core":
             w = np.ones(self.n_shards)
             w[verdict.location % self.n_shards] = 0.5
             return {"action": "rebalance", "shard_weights": w / w.sum()}
-        return {"action": "exclude_and_restart",
-                "exclude": (verdict.kind, verdict.location)}
+        out = {"action": "exclude_and_restart",
+               "exclude": (verdict.kind, verdict.location)}
+        if self.mesh is not None:
+            from ..mitigate.policy import instantiate_policy
+            sev = float(verdict.severity)
+            shim = Verdict(
+                True, verdict.kind, verdict.location, sev,
+                flagged_resources=((verdict.kind, verdict.location, sev),))
+            name = "remap" if verdict.kind == "core" else "reroute"
+            p = instantiate_policy(name).plan(shim, None, self.mesh)
+            out.update(policy=p.policy, exclude_cores=p.exclude_cores,
+                       avoid_links=p.avoid_links, plan=p)
+        return out
+
+
+#: Back-compat alias: the protocol-level ``MitigationPolicy`` now lives in
+#: :mod:`repro.mitigate.policy`; the pod-telemetry policy keeps its old
+#: import name here.
+MitigationPolicy = PodMitigationPolicy
 
 
 class StepTelemetry:
@@ -300,7 +333,7 @@ class StepTelemetry:
     noise, sustained bursts are fail-slow — and peers at the measured
     healthy-median baseline with the measured relative noise), streamed
     into the resident :class:`PodDetector` sketch (``observe``), and the
-    window's verdict plus the :class:`MitigationPolicy` plan are
+    window's verdict plus the :class:`PodMitigationPolicy` plan are
     returned/recorded — so a slow host shows up as a flagged ``core 0``
     verdict within one window of onset.
 
@@ -316,7 +349,8 @@ class StepTelemetry:
         self.cfg = cfg or PodTelemetryConfig(mesh_w=4, mesh_h=4,
                                              window_steps=8)
         self.detector = PodDetector(self.cfg)
-        self.policy = MitigationPolicy(n_shards=n_shards)
+        self.policy = PodMitigationPolicy(n_shards=n_shards,
+                                          mesh=self.detector.mesh)
         self.pod = PodSimulator(self.cfg, step_flops=step_flops,
                                 collective_bytes=collective_bytes,
                                 seed=seed)

@@ -142,6 +142,14 @@ def main(argv=None):
                           f"{verdict.kind} {verdict.location} "
                           f"severity {verdict.severity:.1f} -> "
                           f"{plan['action']}")
+                    if plan.get("exclude_cores") or plan.get("avoid_links"):
+                        # registry-backed plan (remap/reroute on the pod
+                        # mesh): the resource edits the restart applies
+                        print(f"[telemetry] {plan['policy']} plan: "
+                              f"exclude cores "
+                              f"{list(plan.get('exclude_cores', ()))}, "
+                              f"avoid links "
+                              f"{list(plan.get('avoid_links', ()))}")
                     if plan["action"] == "exclude_and_restart" \
                             and args.ckpt_dir:
                         path = store.save(args.ckpt_dir, step + 1,

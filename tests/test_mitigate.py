@@ -1,0 +1,504 @@
+"""Detect → mitigate subsystem: policy registry, plan semantics,
+mitigated re-simulation, recovered-throughput metrics, and the
+campaign/streaming wiring.
+
+The wrong-verdict regression tests register a custom always-wrong
+detector at module import; it exists only in this interpreter, so every
+campaign here that uses it runs the serial executor (process-pool
+workers re-import modules in fresh interpreters and would not see it).
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.campaign import (CampaignGrid, DeploymentCache,
+                                 enumerate_scenarios, run_campaign)
+from repro.core.detectors import Verdict, register_detector
+from repro.core.failures import FailSlow
+from repro.core.graph import build_workload
+from repro.core.mapping import map_graph
+from repro.core.metrics import MIN_GAP_FRAC
+from repro.core.routing import DetourMesh, Mesh2D
+from repro.core.simulator import clip_failures
+from repro.core.sloth import Sloth
+from repro.mitigate import (MitigationPlan, MitigationPolicy,
+                            QuarantinePolicy, RemapPolicy,
+                            available_policies, flagged_sites,
+                            instantiate_policy, register_policy)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+class WrongCoreDetector:
+    """Always flags core 0 with high confidence — the mis-mitigation
+    probe (campaign seeds below never draw core 0 as truth)."""
+
+    name = "wrongcore"
+
+    def prepare(self, graph, mesh, profile=None, cfg=None):
+        self.mesh = mesh
+        return self
+
+    def analyse(self, sim):
+        return Verdict(True, "core", 0, 99.0,
+                       ranking=[("core", 0, 99.0)],
+                       flagged_resources=(("core", 0, 99.0),),
+                       mesh=self.mesh, detector="wrongcore")
+
+
+register_detector("wrongcore", WrongCoreDetector)
+
+
+def core_verdict(mesh, *cores):
+    return Verdict(True, "core", cores[0], 9.0,
+                   ranking=[("core", c, 9.0) for c in cores],
+                   flagged_resources=tuple(("core", c, 9.0)
+                                           for c in cores),
+                   mesh=mesh)
+
+
+def link_verdict(mesh, *links):
+    return Verdict(True, "link", links[0], 9.0,
+                   ranking=[("link", l, 9.0) for l in links],
+                   flagged_resources=tuple(("link", l, 9.0)
+                                           for l in links),
+                   mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_registry_order_and_protocol():
+    assert available_policies()[:4] == ("remap", "reroute", "quarantine",
+                                        "none")
+    for name in ("remap", "reroute", "quarantine", "none"):
+        pol = instantiate_policy(name)
+        assert pol.name == name
+        assert isinstance(pol, MitigationPolicy)
+
+
+def test_registry_round_trip_and_name_contract():
+    class Custom:
+        name = "custom-mit"
+
+        def plan(self, verdict, mapped, mesh, cfg=None):
+            return MitigationPlan(policy=self.name, acted=False)
+
+        def apply(self, plan, mapped, cfg=None):
+            return mapped
+
+    register_policy("custom-mit", Custom)
+    try:
+        assert "custom-mit" in available_policies()
+        assert instantiate_policy("CUSTOM-MIT").name == "custom-mit"
+        # duplicate registration is an error without overwrite
+        with pytest.raises(ValueError):
+            register_policy("custom-mit", Custom)
+
+        class Misnamed:
+            name = "other"
+            plan = Custom.plan
+            apply = Custom.apply
+
+        register_policy("misnamed", Misnamed)
+        with pytest.raises(ValueError):
+            instantiate_policy("misnamed")
+    finally:
+        from repro.mitigate.policy import _REGISTRY
+        _REGISTRY.pop("custom-mit", None)
+        _REGISTRY.pop("misnamed", None)
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(KeyError):
+        instantiate_policy("gremlin")
+
+
+# ---------------------------------------------------------------------------
+# flagged_sites
+# ---------------------------------------------------------------------------
+
+def test_flagged_sites_multi_and_dedup():
+    mesh = Mesh2D(4)
+    v = Verdict(True, "core", 5, 9.0,
+                flagged_resources=(("core", 5, 9.0), ("link", 3, 4.0),
+                                   ("core", 5, 8.0)), mesh=mesh)
+    assert flagged_sites(v) == (("core", 5), ("link", 3))
+
+
+def test_flagged_sites_top1_fallback_and_unflagged():
+    mesh = Mesh2D(4)
+    # baselines leave flagged_resources empty → top-1 kind/location
+    v = Verdict(True, "link", 7, 3.0, mesh=mesh)
+    assert flagged_sites(v) == (("link", 7),)
+    assert flagged_sites(Verdict(False, None, None, 0.0)) == ()
+
+
+# ---------------------------------------------------------------------------
+# plan semantics
+# ---------------------------------------------------------------------------
+
+def test_remap_excludes_exactly_flagged_cores():
+    mesh = Mesh2D(4)
+    plan = RemapPolicy().plan(core_verdict(mesh, 5, 9), None, mesh)
+    assert plan.acted
+    assert plan.exclude_cores == (5, 9)
+    assert plan.avoid_links == ()
+
+
+def test_remap_ignores_link_only_verdicts():
+    mesh = Mesh2D(4)
+    plan = RemapPolicy().plan(link_verdict(mesh, 3), None, mesh)
+    assert not plan.acted
+
+
+def test_reroute_avoids_flagged_links():
+    mesh = Mesh2D(4)
+    pol = instantiate_policy("reroute")
+    plan = pol.plan(link_verdict(mesh, 3), None, mesh)
+    assert plan.acted
+    assert plan.avoid_links == (3,)
+    assert plan.exclude_cores == ()
+
+
+def test_reroute_router_fallback():
+    """≥2 flagged links incident on one router → the router's core is
+    excluded and all its links avoided."""
+    mesh = Mesh2D(4)
+    lids = mesh.links_of_router(5)
+    plan = instantiate_policy("reroute").plan(
+        link_verdict(mesh, lids[0], lids[1]), None, mesh)
+    assert plan.acted
+    assert 5 in plan.exclude_cores
+    assert set(lids) <= set(plan.avoid_links)
+
+
+def test_quarantine_neighbourhood():
+    mesh = Mesh2D(4)
+    plan = QuarantinePolicy().plan(core_verdict(mesh, 5), None, mesh)
+    assert plan.exclude_cores == (1, 4, 5, 6, 9)
+
+
+def test_exclusion_never_empties_mesh():
+    mesh = Mesh2D(2, 1)
+    plan = QuarantinePolicy().plan(core_verdict(mesh, 0), None, mesh)
+    assert len(plan.exclude_cores) < mesh.n_cores
+
+
+def test_none_policy_never_acts():
+    mesh = Mesh2D(4)
+    pol = instantiate_policy("none")
+    plan = pol.plan(core_verdict(mesh, 5), None, mesh)
+    assert not plan.acted
+    g = build_workload("darknet19")
+    mapped = map_graph(g, mesh)
+    assert pol.apply(plan, mapped) is mapped
+
+
+# ---------------------------------------------------------------------------
+# apply: mapping + routing edits
+# ---------------------------------------------------------------------------
+
+def test_map_graph_empty_exclusion_bit_identical():
+    g = build_workload("darknet19")
+    mesh = Mesh2D(4)
+    a = map_graph(g, mesh)
+    b = map_graph(g, mesh, exclude_cores=())
+    assert [t.core for t in a.tasks] == [t.core for t in b.tasks]
+
+
+def test_map_graph_exclusion_placement():
+    g = build_workload("darknet19")
+    mesh = Mesh2D(4)
+    mapped = map_graph(g, mesh, exclude_cores=(5, 9))
+    assert {t.core for t in mapped.tasks}.isdisjoint({5, 9})
+    with pytest.raises(ValueError):
+        map_graph(g, mesh, exclude_cores=(99,))
+    with pytest.raises(ValueError):
+        map_graph(g, mesh, exclude_cores=tuple(range(16)))
+
+
+def test_remap_apply_moves_work_off_flagged_core():
+    g = build_workload("darknet19")
+    mesh = Mesh2D(4)
+    mapped = map_graph(g, mesh)
+    pol = RemapPolicy()
+    plan = pol.plan(core_verdict(mesh, 5), mapped, mesh)
+    out = pol.apply(plan, mapped)
+    assert 5 not in {t.core for t in out.tasks}
+    assert out.mesh is mesh                 # routing untouched
+    assert 5 in {t.core for t in mapped.tasks}  # input not mutated
+
+
+def test_detour_mesh_avoids_links_same_identities():
+    mesh = Mesh2D(4)
+    det = DetourMesh(mesh, avoid_links=(3,))
+    assert det.links == mesh.links          # link ids stable
+    u, v = mesh.links[3]
+    path = det.route(u, v)
+    assert 3 not in path
+    # un-avoided pairs may still route differently but never through 3
+    for src in range(mesh.n_cores):
+        for dst in range(mesh.n_cores):
+            if src != dst:
+                assert 3 not in det.route(src, dst)
+
+
+def test_detour_mesh_disconnection_falls_back():
+    mesh = Mesh2D(2, 1)
+    det = DetourMesh(mesh, avoid_links=tuple(range(mesh.n_links)))
+    # nothing left to route over: fall back to the base XY path
+    assert det.route(0, 1) == mesh.route(0, 1)
+
+
+def test_route_avoiding_deterministic_shortest():
+    mesh = Mesh2D(4)
+    base = mesh.route(0, 5)
+    detour = mesh.route_avoiding(0, 5, {base[0]})
+    assert detour is not None
+    assert base[0] not in detour
+    assert len(detour) == len(base)         # a 2-hop alternative exists
+    assert detour == mesh.route_avoiding(0, 5, {base[0]})
+
+
+def test_reroute_apply_keeps_placement():
+    g = build_workload("darknet19")
+    mesh = Mesh2D(4)
+    mapped = map_graph(g, mesh)
+    pol = instantiate_policy("reroute")
+    plan = pol.plan(link_verdict(mesh, 3), mapped, mesh)
+    out = pol.apply(plan, mapped)
+    assert [t.core for t in out.tasks] == [t.core for t in mapped.tasks]
+    assert isinstance(out.mesh, DetourMesh)
+    assert out.mesh.avoid == frozenset({3})
+
+
+# ---------------------------------------------------------------------------
+# clip_failures: the remaining-window semantics
+# ---------------------------------------------------------------------------
+
+def test_clip_failures_rebases_windows():
+    fs = [FailSlow("core", 5, 2.0, 10.0, 8.0),   # spans the cut
+          FailSlow("core", 6, 8.0, 4.0, 8.0),    # starts after the cut
+          FailSlow("link", 3, 0.0, 4.0, 8.0)]    # elapsed before the cut
+    out = clip_failures(fs, 5.0)
+    assert [(f.location, f.t0, f.duration) for f in out] \
+        == [(5, 0.0, 7.0), (6, 3.0, 4.0)]
+    # from_time=0 is the identity
+    assert clip_failures(fs, 0.0) == fs
+    assert clip_failures(None, 5.0) == []
+
+
+# ---------------------------------------------------------------------------
+# campaign integration: recovered throughput
+# ---------------------------------------------------------------------------
+
+GRID = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                    kinds=("core", "none"), severities=(10.0,),
+                    reps=4, campaign_seed=7)
+
+
+@pytest.fixture(scope="module")
+def mitigated_result():
+    return run_campaign(GRID, workers=0, cache=DeploymentCache(),
+                        mitigation=("remap", "none"))
+
+
+def test_campaign_remap_recovers_majority_of_gap(mitigated_result):
+    """The headline acceptance: on decisive 10× core failures, remap on
+    correct verdicts recovers at least half the failure-induced gap."""
+    st = mitigated_result.mitigation[("sloth", "remap")]
+    assert st.recovered_mean >= 0.5
+    assert st.improved.successes == st.improved.trials > 0
+
+
+def test_campaign_none_control_exact_zero(mitigated_result):
+    st = mitigated_result.mitigation[("sloth", "none")]
+    assert st.acted.successes == 0
+    assert st.recovered_mean == 0.0
+    for o in mitigated_result.outcomes:
+        mo = o.mitigation_for("sloth", "none")
+        assert not mo.acted
+        assert mo.mitigated_time == mo.failed_time
+        assert mo.recovered_frac == 0.0
+        assert mo.switch_time is None
+
+
+def test_campaign_mitigation_outcome_consistency(mitigated_result):
+    assert mitigated_result.policies == ("remap", "none")
+    for o in mitigated_result.outcomes:
+        assert [m.policy for m in o.mitigation_results] == ["remap",
+                                                            "none"]
+        mo = o.mitigation_for("sloth", "remap")
+        assert mo.detector == "sloth" and mo.policy == "remap"
+        if o.kind == "core":
+            assert mo.gap > MIN_GAP_FRAC * mo.healthy_time
+            if mo.correct and mo.acted:
+                assert mo.recovered_frac > 0.0
+                assert mo.slowdown_vs_healthy < mo.failed_time \
+                    / mo.healthy_time
+        else:
+            # failure-free and correctly unflagged: nothing to act on,
+            # so the mitigated makespan is exactly the failed one
+            if mo.correct:
+                assert not mo.acted
+                assert mo.recovered_frac == 0.0
+                assert mo.mitigated_time == mo.failed_time
+        with pytest.raises(KeyError):
+            o.mitigation_for("sloth", "quarantine")
+
+
+def test_campaign_mitigation_executors_bit_identical(mitigated_result):
+    thread = run_campaign(GRID, workers=2, executor="thread",
+                          cache=DeploymentCache(),
+                          mitigation=("remap", "none"))
+    process = run_campaign(GRID, workers=2, executor="process",
+                           mitigation=("remap", "none"))
+    for other in (thread, process):
+        assert other.outcomes == mitigated_result.outcomes
+        assert other.mitigation == mitigated_result.mitigation
+
+
+def test_campaign_mitigation_normalisation():
+    scens = enumerate_scenarios(GRID)
+    assert len(scens) == GRID.n_scenarios()
+    with pytest.raises(KeyError):
+        run_campaign(GRID, workers=0, mitigation=("gremlin",))
+    res = run_campaign(
+        dataclasses.replace(GRID, kinds=("none",), reps=1),
+        workers=0, cache=DeploymentCache(), mitigation="remap")
+    assert res.policies == ("remap",)
+
+
+def test_streaming_mitigation_switches_at_first_flag(mitigated_result):
+    res = run_campaign(GRID, workers=0, cache=DeploymentCache(),
+                       streaming=4, mitigation=("remap",))
+    for o in res.outcomes:
+        mo = o.mitigation_for("sloth", "remap")
+        det = o.detector_results[0]
+        if o.kind == "core" and mo.acted:
+            assert mo.switch_time is not None
+            assert det.detection_latency is not None
+            assert 0.0 < mo.switch_time <= mo.failed_time
+            assert mo.recovered_frac > 0.0
+            # paying the detection latency can only shrink the recovery
+            # relative to the post-hoc restart of the same scenario
+            ph = next(p for p in mitigated_result.outcomes
+                      if p.scenario_id == o.scenario_id)
+            assert mo.recovered_frac <= \
+                ph.mitigation_for("sloth", "remap").recovered_frac + 1e-9
+        elif not mo.acted:
+            assert mo.switch_time is None
+
+
+def test_wrong_verdict_negative_recovery():
+    """Acting on a wrong verdict makes things worse: recovered fraction
+    goes negative on real failures, and false-positive actions carry a
+    positive mis-mitigation penalty."""
+    grid = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                        kinds=("core", "none"), severities=(10.0,),
+                        reps=3, campaign_seed=21)
+    res = run_campaign(grid, workers=0, detectors=("wrongcore",),
+                       cache=DeploymentCache(), mitigation=("remap",))
+    st = res.mitigation[("wrongcore", "remap")]
+    assert st.mis_acted.successes == st.mis_acted.trials > 0
+    assert st.penalty_mean > 0.0
+    for o in res.outcomes:
+        mo = o.mitigation_for("wrongcore", "remap")
+        assert mo.acted and not mo.correct
+        if o.kind == "core":
+            assert 0 not in o.truth_locations   # probe premise
+            assert mo.recovered_frac < 0.0
+        assert mo.penalty > 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-failure severity mixes + weighted mixed draws + per-mesh curves
+# ---------------------------------------------------------------------------
+
+def test_severity_mix_pins_failure_count():
+    g = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                     kinds=("core",), severities=((2.0, 4.0, 8.0),),
+                     reps=1, n_failures=(1, 2))
+    scens = enumerate_scenarios(g)
+    assert [s.n_failures for s in scens] == [3]
+    assert g.n_scenarios() == 1
+
+
+def test_severity_mix_assigns_per_failure():
+    g = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                     kinds=("core+link",), severities=((1.5, 10.0),),
+                     reps=1, campaign_seed=5)
+    res = run_campaign(g, workers=0, cache=DeploymentCache())
+    (o,) = res.outcomes
+    assert o.severity == (1.5, 10.0)
+    assert o.truth_kinds == ("core", "link")
+    assert o.truth_severities == (1.5, 10.0)
+    assert o.effective_truth_severities == (1.5, 10.0)
+
+
+def test_scalar_severity_broadcasts():
+    g = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                     kinds=("core",), severities=(8.0,), n_failures=(2,),
+                     reps=1)
+    res = run_campaign(g, workers=0, cache=DeploymentCache())
+    (o,) = res.outcomes
+    assert o.truth_severities == (8.0, 8.0)
+    assert o.effective_truth_severities == (8.0, 8.0)
+
+
+def test_severity_mix_validation():
+    with pytest.raises(ValueError):
+        CampaignGrid(severities=((1.5,),))          # ambiguous 1-tuple
+    with pytest.raises(ValueError):
+        CampaignGrid(severities=((1.5, 0.0),))      # non-positive entry
+    with pytest.raises(ValueError):
+        # composite pins 2 failures, mix assigns 3
+        CampaignGrid(kinds=("core+link",),
+                     severities=((1.0, 2.0, 3.0),)).n_scenarios()
+
+
+def test_mixed_weights_bias_and_validation():
+    g = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                     kinds=("mixed",), severities=(10.0,),
+                     n_failures=(2,), reps=10, campaign_seed=11,
+                     mixed_weights={"core": 7, "link": 3})
+    assert g.mixed_weights == (("core", 7.0), ("link", 3.0))
+    res = run_campaign(g, workers=0, cache=DeploymentCache())
+    kinds = [k for o in res.outcomes for k in o.truth_kinds]
+    assert "router" not in kinds            # zero-weight kind never drawn
+    assert kinds.count("core") > 0 and kinds.count("link") > 0
+    with pytest.raises(ValueError):
+        CampaignGrid(mixed_weights={"gremlin": 1})
+    with pytest.raises(ValueError):
+        CampaignGrid(mixed_weights={"core": 0.0, "link": 0.0})
+
+
+def test_mixed_weights_default_bit_identical():
+    base = CampaignGrid(workloads=("darknet19",), meshes=(4,),
+                        kinds=("mixed",), severities=(10.0,),
+                        n_failures=(2,), reps=3, campaign_seed=11)
+    a = run_campaign(base, workers=0, cache=DeploymentCache())
+    b = run_campaign(dataclasses.replace(base, mixed_weights=None),
+                     workers=0, cache=DeploymentCache())
+    assert a.outcomes == b.outcomes
+
+
+def test_severity_curve_by_mesh():
+    g = CampaignGrid(workloads=("darknet19",), meshes=(4, (4, 2)),
+                     kinds=("core", "none"), severities=(2.0, 10.0),
+                     reps=2, campaign_seed=9)
+    res = run_campaign(g, workers=0, cache=DeploymentCache())
+    pooled = res.severity_curve()
+    per_mesh = res.severity_curve_by_mesh()
+    assert set(per_mesh) == {(4, 4), (4, 2)}
+    for mesh_key, curve in per_mesh.items():
+        assert [p.severity for p in curve] == [p.severity for p in pooled]
+        for p in curve:
+            assert p.accuracy.trials == 2   # reps per (mesh, severity)
+    # per-mesh trials partition the pooled trials
+    for i, p in enumerate(pooled):
+        assert sum(c[i].accuracy.trials for c in per_mesh.values()) \
+            == p.accuracy.trials
