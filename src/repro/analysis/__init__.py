@@ -1,7 +1,8 @@
 """Static verification of the repo's deployment and determinism claims.
 
-Three execution-free passes, one CLI (``python -m repro.analysis
---check all [--json]``; exit 0 iff no findings):
+Four execution-free passes, one CLI (``python -m repro.analysis
+--check all [--json] [--baseline FILE]``; exit 0 iff no finding
+outside the baseline):
 
 * :mod:`.memory_model` — closed-form per-chip footprint of the recorder
   (Stage-1 tables, Stage-2 slots, drain buffer, packed/Pallas layouts)
@@ -11,29 +12,42 @@ Three execution-free passes, one CLI (``python -m repro.analysis
 * :mod:`.kernel_audit` — AST audit of every ``kernels/*/kernel.py``:
   AUDIT contracts, BlockSpec index-map bounds vs the grid, grid-carried
   write races on aliased refs, dtype-narrowing hazards.
-* :mod:`.lints` — determinism lints over ``core/``/``kernels/``:
-  unseeded RNG, wall-clock reads, unregistered detector classes,
-  order-sensitive set iteration.
+* :mod:`.lints` — determinism lints over ``core/``, ``kernels/``,
+  ``mitigate/``, ``distributed/``, ``launch/``, ``serving/`` and
+  ``data/``: unseeded RNG, wall-clock reads, unregistered detector
+  classes, order-sensitive set iteration.
+* :mod:`.dataflow` — interprocedural analysis over the call graph
+  (:mod:`.callgraph`): seed-provenance taint for every RNG
+  construction, cross-module f32→bf16/f16 narrowing, and
+  order-sensitive float reductions (``sum`` over dict/set values,
+  unsorted loop accumulation).
 
 Each pass exposes ``check() -> list[Finding]`` and a ``self_test()``
 that plants synthetic violations and asserts they are caught (run via
 ``python -m repro.analysis --self-test``; also covered by
-``tests/test_analysis.py``).
+``tests/test_analysis.py``).  Accepted pre-existing findings live in
+the committed ``analysis/baseline.json`` keyed by line-independent
+fingerprints (see :mod:`.report`); ``--baseline`` makes only
+*new*-fingerprint findings fail, ``--update-baseline`` re-accepts the
+current set.
 """
 
 from .memory_model import (DEFAULT_BUDGET_KB,  # noqa: F401
                            MemoryBudgetError, memory_report,
                            validate_config, validate_params)
-from .report import Finding, findings_to_json, render_findings  # noqa: F401
+from .report import (Finding, findings_to_json,  # noqa: F401
+                     load_baseline, new_findings, render_findings,
+                     write_baseline)
 
 __all__ = [
     "DEFAULT_BUDGET_KB", "MemoryBudgetError", "memory_report",
     "validate_config", "validate_params", "Finding",
-    "findings_to_json", "render_findings", "run_checks", "CHECKS",
+    "findings_to_json", "render_findings", "load_baseline",
+    "write_baseline", "new_findings", "run_checks", "CHECKS",
 ]
 
 #: Check name → module path; ``--check all`` runs them in this order.
-CHECKS = ("memory", "kernels", "lints")
+CHECKS = ("memory", "kernels", "lints", "dataflow")
 
 
 def _pass_module(name: str):
@@ -46,21 +60,31 @@ def _pass_module(name: str):
     if name == "lints":
         from . import lints
         return lints
+    if name == "dataflow":
+        from . import dataflow
+        return dataflow
     raise ValueError(f"unknown check {name!r}; options: "
                      f"{CHECKS + ('all',)}")
 
 
 def run_checks(which: str = "all", root=None,
-               budget_kb: float | None = None) -> list[Finding]:
-    """Run one pass (or all) and return the combined findings."""
+               budget_kb: float | None = None,
+               timings: dict | None = None) -> list[Finding]:
+    """Run one pass (or all) and return the combined findings.  Pass a
+    dict as ``timings`` to receive per-pass wall seconds (the CLI's
+    ``--json`` cost tracking)."""
+    import time
     names = CHECKS if which == "all" else (which,)
     findings: list[Finding] = []
     for name in names:
         mod = _pass_module(name)
+        t0 = time.perf_counter()  # lint: allow-wallclock
         if name == "memory":
             findings.extend(mod.check(root, budget_kb=budget_kb))
         else:
             findings.extend(mod.check(root))
+        if timings is not None:
+            timings[name] = round(time.perf_counter() - t0, 4)  # lint: allow-wallclock
     return findings
 
 

@@ -359,7 +359,8 @@ def audit_source(source: str, path: str) -> list[Finding]:
         _audit_specs_list(specs, ranks, path, findings)
     # module-wide dtype rules
     _audit_dtypes(tree, path, findings)
-    return _dedupe(findings)
+    from .report import attach_symbols
+    return attach_symbols(_dedupe(findings), {path: tree})
 
 
 def _dedupe(findings: list[Finding]) -> list[Finding]:

@@ -3,8 +3,8 @@
 The campaign's bit-identity contract (serial == thread == process, and
 seed → scenario derivation) survives only if nothing inside the core
 pipeline consults ambient nondeterminism.  These lints make the
-contract machine-checked over ``core/``, ``kernels/`` and ``mitigate/``
-(registration also covers ``distributed/``):
+contract machine-checked over ``core/``, ``kernels/``, ``mitigate/``,
+``distributed/``, ``launch/``, ``serving/`` and ``data/``:
 
 * ``unseeded-rng`` — module-level ``np.random.*`` calls (the legacy
   global generator), zero-argument ``np.random.default_rng()``, and
@@ -35,7 +35,10 @@ contract machine-checked over ``core/``, ``kernels/`` and ``mitigate/``
   it is not flagged.
 
 Any line can carry ``# lint: allow-<rule>`` to record a reviewed,
-deliberate exception (see ROADMAP "Machine-enforced invariants").
+deliberate exception (see ROADMAP "Machine-enforced invariants");
+findings accepted wholesale live in the committed
+``analysis/baseline.json`` instead (``analysis/README.md`` explains
+when to use which).
 """
 
 from __future__ import annotations
@@ -49,10 +52,15 @@ from .report import Finding
 #: Directories (relative to the repro package) each lint sweeps.
 #: ``mitigate`` is in every scope: policies feed re-simulated campaign
 #: outcomes, so they carry the same determinism contract as ``core``.
-RNG_SCOPE = ("core", "kernels", "mitigate")
-WALLCLOCK_SCOPE = ("core", "kernels", "mitigate")
-DETECTOR_SCOPE = ("core", "distributed", "mitigate")
-SET_SCOPE = ("core", "kernels", "mitigate")
+#: PR 9 widened every scope to the launch/serving/data surface —
+#: telemetry streams and serving traces feed campaign-comparable
+#: verdicts, so they carry the contract too.
+_FULL_SCOPE = ("core", "kernels", "mitigate", "distributed", "launch",
+               "serving", "data")
+RNG_SCOPE = _FULL_SCOPE
+WALLCLOCK_SCOPE = _FULL_SCOPE
+DETECTOR_SCOPE = _FULL_SCOPE
+SET_SCOPE = _FULL_SCOPE
 
 _WALLCLOCK_TIME_FNS = {"time", "perf_counter", "monotonic",
                        "process_time"}
@@ -402,21 +410,30 @@ def lint_source(source: str, path: str) -> list[Finding]:
 
 
 def check(root=None) -> list[Finding]:
-    """Lint the repo: each rule over its directory scope."""
+    """Lint the repo: each file parsed once, every in-scope rule run on
+    it, enclosing symbols attached for stable fingerprints."""
     pkg = _package_root(root)
     findings: list[Finding] = []
-    for rule, scopes in _RULES:
+    trees: dict[str, ast.Module] = {}
+    all_files: dict[Path, set[int]] = {}
+    for i, (_rule, scopes) in enumerate(_RULES):
         for f in _files(pkg, scopes):
-            src = f.read_text()
-            try:
-                tree = ast.parse(src)
-            except SyntaxError as e:
-                findings.append(Finding(
-                    "lints", "syntax-error", _rel(f), e.lineno or 0,
-                    f"unparsable module: {e.msg}"))
-                continue
-            findings.extend(rule(tree, src, _rel(f)))
-    return _dedupe_all(findings)
+            all_files.setdefault(f, set()).add(i)
+    for f in sorted(all_files):
+        src = f.read_text()
+        rel = _rel(f)
+        try:
+            tree = ast.parse(src)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "lints", "syntax-error", rel, e.lineno or 0,
+                f"unparsable module: {e.msg}"))
+            continue
+        trees[rel] = tree
+        for i in sorted(all_files[f]):
+            findings.extend(_RULES[i][0](tree, src, rel))
+    from .report import attach_symbols
+    return attach_symbols(_dedupe_all(findings), trees)
 
 
 def _dedupe_all(findings: list[Finding]) -> list[Finding]:
@@ -493,12 +510,15 @@ _SYNTHETIC_CLEAN = (
 
 def self_test() -> None:
     """Plant one synthetic violation per rule and assert it is caught;
-    assert the allowlisted/registered/sorted shapes stay clean and the
-    real tree has no findings."""
-    clean = check()
-    assert clean == [], \
-        "clean-tree lint findings:\n" + "\n".join(
-            f.render() for f in clean)
+    assert the allowlisted/registered/sorted shapes stay clean and
+    every real-tree finding is carried by the shipped baseline."""
+    from .report import load_baseline
+    baseline = load_baseline()
+    new = [f for f in check() if f.fingerprint not in baseline]
+    assert new == [], \
+        "lint findings missing from analysis/baseline.json (fix, " \
+        "allowlist, or --update-baseline):\n" + "\n".join(
+            f"{f.render()}  fp={f.fingerprint}" for f in new)
     for rule, src in _SYNTHETIC.items():
         got = {f.rule for f in lint_source(src, "<synthetic>")}
         assert rule in got, \

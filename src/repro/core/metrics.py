@@ -512,7 +512,11 @@ def aggregate(outcomes: list[ScenarioOutcome],
     ov = [o.probe_overhead for o in outcomes]
     mean_ov = sum(ov) / len(ov) if ov else 0.0
     dep_ov = deployment_overheads(outcomes)
-    mean_ov_unw = (sum(dep_ov.values()) / len(dep_ov)) if dep_ov else 0.0
+    # sorted(): dict order reflects outcome arrival, which differs per
+    # executor/shard merge — summing floats in a fixed order keeps the
+    # serial == thread == process bit-identity contract.
+    mean_ov_unw = (sum(sorted(dep_ov.values())) / len(dep_ov)) \
+        if dep_ov else 0.0
     return CampaignMetrics(
         n_scenarios=len(outcomes),
         accuracy=acc,

@@ -68,10 +68,15 @@ class PodSimulator:
     fail-slow windows."""
 
     def __init__(self, cfg: PodTelemetryConfig, *, step_flops: float,
-                 collective_bytes: float, seed: int = 0):
+                 collective_bytes: float, seed: int = 0,
+                 host: int = 0):
         self.cfg = cfg
         self.mesh = Mesh2D(cfg.mesh_w, cfg.mesh_h)
-        self.rng = np.random.default_rng(seed)
+        # Host identity and mesh shape are folded into the stream key
+        # the same way campaign.py keys scenarios — two hosts sharing a
+        # base seed must not draw identical telemetry noise.
+        self.rng = np.random.default_rng(
+            [seed, host, cfg.mesh_w, cfg.mesh_h])
         self.step_flops = step_flops
         self.coll_bytes = collective_bytes
         self.chip_speed = 1.0 + 0.02 * self.rng.standard_normal(
@@ -344,7 +349,7 @@ class StepTelemetry:
 
     def __init__(self, cfg: PodTelemetryConfig | None = None, *,
                  n_shards: int = 4, warmup: int = 1, seed: int = 0,
-                 step_flops: float = 1e12,
+                 host: int = 0, step_flops: float = 1e12,
                  collective_bytes: float = 1e8):
         self.cfg = cfg or PodTelemetryConfig(mesh_w=4, mesh_h=4,
                                              window_steps=8)
@@ -353,7 +358,7 @@ class StepTelemetry:
                                           mesh=self.detector.mesh)
         self.pod = PodSimulator(self.cfg, step_flops=step_flops,
                                 collective_bytes=collective_bytes,
-                                seed=seed)
+                                seed=seed, host=host)
         self.warmup = warmup
         self._skipped = 0
         self._buf: list[float] = []

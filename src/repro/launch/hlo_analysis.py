@@ -271,7 +271,7 @@ class Analyzer:
             "hbm_bytes": 2 * wb,
             "collective_bytes": coll,
             "collective_counts": cnt,
-            "collective_total": sum(coll.values()),
+            "collective_total": sum(sorted(coll.values())),
         }
 
 

@@ -57,7 +57,8 @@ def main(argv=None):
         telemetry = StepTelemetry(
             PodTelemetryConfig(mesh_w=4, mesh_h=4,
                                window_steps=args.telemetry_window),
-            n_shards=args.batch, warmup=1, seed=args.seed)
+            n_shards=args.batch, warmup=1, seed=args.seed,
+            host=jax.process_index())
 
         def hook(kind, dt):
             if kind != "decode":    # prefills are not per-step samples
@@ -72,7 +73,9 @@ def main(argv=None):
                          EngineConfig(batch=args.batch,
                                       cache_len=args.cache_len),
                          step_hook=hook)
-    rng = np.random.default_rng(args.seed)
+    # Fold host identity into the request-stream key (campaign.py
+    # style) so multi-host launches don't submit identical workloads.
+    rng = np.random.default_rng([args.seed, jax.process_index()])
     enc_frames = None
     if cfg.enc_dec:
         enc_frames = jnp.zeros((args.batch, cfg.n_frames, cfg.d_model),
@@ -81,9 +84,9 @@ def main(argv=None):
         n = int(rng.integers(2, args.prompt_len + 1))
         engine.submit(Request(i, rng.integers(0, cfg.vocab, size=n)
                               .astype(np.int32), max_new=args.max_new))
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # lint: allow-wallclock (reported only)
     done = engine.run(enc_frames=enc_frames)
-    wall = time.perf_counter() - t0
+    wall = time.perf_counter() - t0  # lint: allow-wallclock
     tok = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {tok} tokens, {wall:.1f}s "
           f"({tok / max(wall, 1e-9):.1f} tok/s)")

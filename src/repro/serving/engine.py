@@ -89,24 +89,24 @@ class ServeEngine:
             s = max(len(r.prompt) for r in batch)
             toks = np.stack([np.pad(r.prompt, (s - len(r.prompt), 0))
                              for r in batch]).astype(np.int32)
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # lint: allow-wallclock (measured)
             args = (self.params, toks) + ((enc_frames,) if self.cfg.enc_dec
                                           else ())
             out = self._prefill(*args)
             last, cache = out[0], out[1]
             memory = out[2] if self.cfg.enc_dec else None
             nxt = jnp.argmax(last[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            self._record("prefill", time.perf_counter() - t0)
+            self._record("prefill", time.perf_counter() - t0)  # lint: allow-wallclock
             max_new = max(r.max_new for r in batch)
             for k in range(max_new):
                 for r, t in zip(batch, np.asarray(nxt)[:, 0]):
                     if r.rid >= 0 and len(r.out_tokens) < r.max_new:
                         r.out_tokens.append(int(t))
-                t0 = time.perf_counter()
+                t0 = time.perf_counter()  # lint: allow-wallclock
                 logits, cache = self._decode(self.params, nxt, cache,
                                              jnp.int32(s + k), memory)
                 nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]\
                     .astype(jnp.int32)
-                self._record("decode", time.perf_counter() - t0)
+                self._record("decode", time.perf_counter() - t0)  # lint: allow-wallclock
             done.extend(r for r in batch if r.rid >= 0)
         return done

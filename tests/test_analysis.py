@@ -1,8 +1,10 @@
 """repro.analysis: static memory model vs measured bytes, kernel audit,
-determinism lints, CLI exit-code contract, and the construction-time
-budget guards."""
+determinism lints, interprocedural dataflow, fingerprints + baseline
+workflow, CLI exit-code contract, and the construction-time budget
+guards."""
 
 import dataclasses
+import json
 import subprocess
 import sys
 from pathlib import Path
@@ -11,9 +13,10 @@ import numpy as np
 import pytest
 from proptest import given, settings, st
 
-from repro.analysis import (MemoryBudgetError, memory_report,
-                            run_checks, validate_params)
-from repro.analysis import kernel_audit, lints, memory_model
+from repro.analysis import (MemoryBudgetError, load_baseline,
+                            memory_report, new_findings, run_checks,
+                            validate_params)
+from repro.analysis import dataflow, kernel_audit, lints, memory_model
 from repro.core.failures import FailSlow
 from repro.core.graph import build_workload
 from repro.core.recorder import record
@@ -32,8 +35,13 @@ REPO = Path(__file__).resolve().parents[1]
 # the clean tree passes; each pass's planted violations are caught
 # ---------------------------------------------------------------------------
 
-def test_clean_tree_has_no_findings():
-    assert run_checks("all") == []
+def test_clean_tree_has_no_unbaselined_findings():
+    """Every finding on the committed tree is carried by the committed
+    baseline — new fingerprints are regressions."""
+    baseline = load_baseline()
+    new = new_findings(run_checks("all"), baseline)
+    assert new == [], "\n".join(
+        f"{f.render()}  fp={f.fingerprint}" for f in new)
 
 
 def test_memory_self_test():
@@ -48,22 +56,51 @@ def test_lints_self_test():
     lints.self_test()
 
 
+def test_dataflow_self_test():
+    dataflow.self_test()
+
+
+def _cli(*argv, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv], cwd=cwd,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True)
+
+
 def test_cli_exit_codes():
-    """--check all exits 0 on the clean tree; a seeded violation (the
-    memory pass under an impossible budget) exits nonzero."""
-    env_cmd = [sys.executable, "-m", "repro.analysis"]
-    ok = subprocess.run(env_cmd + ["--check", "all"], cwd=REPO,
-                        env={"PYTHONPATH": str(REPO / "src"),
-                             "PATH": "/usr/bin:/bin"},
-                        capture_output=True, text=True)
+    """--check all --baseline exits 0 on the clean tree; a seeded
+    violation (the memory pass under an impossible budget) exits
+    nonzero."""
+    ok = _cli("--check", "all", "--baseline", "analysis/baseline.json")
     assert ok.returncode == 0, ok.stdout + ok.stderr
-    bad = subprocess.run(env_cmd + ["--check", "memory",
-                                    "--budget-kb", "1"], cwd=REPO,
-                         env={"PYTHONPATH": str(REPO / "src"),
-                              "PATH": "/usr/bin:/bin"},
-                         capture_output=True, text=True)
+    bad = _cli("--check", "memory", "--budget-kb", "1")
     assert bad.returncode == 1, bad.stdout + bad.stderr
     assert "over-budget" in bad.stdout
+
+
+def test_cli_budget_kb_rejected_for_non_memory_checks():
+    """--budget-kb used to be silently ignored outside the memory pass;
+    now it is a usage error (argparse exit code 2)."""
+    r = _cli("--check", "lints", "--budget-kb", "100")
+    assert r.returncode == 2, r.stdout + r.stderr
+    assert "--budget-kb" in r.stderr
+    # still accepted where it applies
+    assert _cli("--check", "memory", "--budget-kb", "512")\
+        .returncode == 0
+
+
+def test_cli_json_includes_fingerprints_and_timings():
+    r = _cli("--check", "all", "--baseline", "analysis/baseline.json",
+             "--json")
+    assert r.returncode == 0, r.stdout + r.stderr
+    doc = json.loads(r.stdout)
+    assert doc["ok"] and doc["new"] == 0
+    assert set(doc["timings"]) == {"memory", "kernels", "lints",
+                                   "dataflow"}
+    assert all(t >= 0 for t in doc["timings"].values())
+    for row in doc["findings"]:
+        assert row["baselined"] is True
+        assert len(row["fingerprint"]) == 16
 
 
 def test_each_pass_flags_its_synthetic_violation():
@@ -278,3 +315,184 @@ def test_lint_wallclock_allowlist_is_tight():
     stripped = src.replace("# lint: allow-wallclock", "")
     fs = lints.lint_source(stripped, "<campaign>")
     assert any(f.rule == "wallclock" for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# dataflow pass: planted violations per rule (interprocedural)
+# ---------------------------------------------------------------------------
+
+def _df(modules):
+    return dataflow.analyze_modules(modules)
+
+
+def test_dataflow_literal_seed_flagged():
+    fs = _df({"p.core.m": (
+        "import jax\n"
+        "def k():\n"
+        "    return jax.random.PRNGKey(0)\n",
+        "src/repro/core/m.py")})
+    assert any(f.rule == "literal-seed" for f in fs)
+
+
+def test_dataflow_seeded_arguments_stay_clean():
+    """Scenario-seed lists, cfg fields and CLI --seed all classify as
+    seeded; so does a param whose every call site passes a seed."""
+    fs = _df({
+        "p.core.lib": (
+            "import numpy as np\n"
+            "def stream(x):\n"
+            "    return np.random.default_rng(x)\n",
+            "src/repro/core/lib.py"),
+        "p.core.use": (
+            "from .lib import stream\n"
+            "def f(cfg, args, base_seed):\n"
+            "    a = stream(cfg.seed)\n"
+            "    b = stream(args.seed)\n"
+            "    c = stream([base_seed, 3, 7])\n"
+            "    return a, b, c\n",
+            "src/repro/core/use.py")})
+    assert fs == [], "\n".join(f.render() for f in fs)
+
+
+def test_dataflow_unseeded_provenance_traced_across_modules():
+    """An RNG param fed an untraceable value at a call site in another
+    module is flagged at the constructor."""
+    fs = _df({
+        "p.core.lib": (
+            "import numpy as np\n"
+            "def stream(x):\n"
+            "    return np.random.default_rng(x)\n",
+            "src/repro/core/lib.py"),
+        "p.core.use": (
+            "from .lib import stream\n"
+            "def f(values):\n"
+            "    return stream(len(values))\n",
+            "src/repro/core/use.py")})
+    hit = [f for f in fs if f.rule == "unseeded-provenance"]
+    assert hit and hit[0].path.endswith("lib.py")
+    assert hit[0].symbol == "stream"
+
+
+def test_dataflow_cross_module_narrowing_flagged():
+    fs = _df({
+        "p.core.pack": (
+            "import jax.numpy as jnp\n"
+            "def pack(x):\n"
+            "    return x.astype(jnp.bfloat16)\n",
+            "src/repro/core/pack.py"),
+        "p.core.use": (
+            "from .pack import pack\n"
+            "def f(x):\n"
+            "    return pack(x) * 2\n",
+            "src/repro/core/use.py")})
+    assert any(f.rule == "cross-module-narrowing" for f in fs)
+    # same shape with a *widening* cast stays clean
+    fs2 = _df({
+        "p.core.pack": (
+            "import jax.numpy as jnp\n"
+            "def pack(x):\n"
+            "    return x.astype(jnp.float32)\n",
+            "src/repro/core/pack.py"),
+        "p.core.use": (
+            "from .pack import pack\n"
+            "def f(x):\n"
+            "    return pack(x) * 2\n",
+            "src/repro/core/use.py")})
+    assert fs2 == []
+
+
+def test_dataflow_unsorted_accumulation_flagged():
+    src = ("def merge(parts):\n"
+           "    acc = 0.0\n"
+           "    for v in parts.values():\n"
+           "        acc += v\n"
+           "    return acc\n")
+    fs = _df({"p.core.m": (src, "src/repro/core/m.py")})
+    assert any(f.rule == "unsorted-accumulation" for f in fs)
+    # integer counters over the same iteration are exact — not flagged
+    src_int = ("def count(parts):\n"
+               "    n = 0\n"
+               "    for v in parts.values():\n"
+               "        n += 1\n"
+               "    return n\n")
+    assert _df({"p.core.m": (src_int, "src/repro/core/m.py")}) == []
+
+
+def test_dataflow_unordered_sum_and_fixes():
+    bad = ("def t(parts):\n"
+           "    return sum(parts.values())\n")
+    fs = _df({"p.core.m": (bad, "src/repro/core/m.py")})
+    assert any(f.rule == "unordered-sum" for f in fs)
+    good = ("import math\n"
+            "def t(parts):\n"
+            "    return sum(sorted(parts.values()))\n"
+            "def u(parts):\n"
+            "    return math.fsum(parts.values())\n")
+    assert _df({"p.core.m": (good, "src/repro/core/m.py")}) == []
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + baseline workflow
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_stable_under_line_shifts():
+    """Inserting unrelated lines above a finding moves its line but not
+    its fingerprint (the baseline keys on symbols, not lines)."""
+    body = ("import jax\n"
+            "def k():\n"
+            "    return jax.random.PRNGKey(0)\n")
+    shifted = ("import jax\n"
+               "# a comment\n\n\n"
+               "def unrelated():\n"
+               "    return 1\n\n"
+               "def k():\n"
+               "    return jax.random.PRNGKey(0)\n")
+    f1 = _df({"p.core.m": (body, "src/repro/core/m.py")})
+    f2 = _df({"p.core.m": (shifted, "src/repro/core/m.py")})
+    assert len(f1) == len(f2) == 1
+    assert f1[0].line != f2[0].line
+    assert f1[0].symbol == f2[0].symbol == "k"
+    assert f1[0].fingerprint == f2[0].fingerprint
+
+
+def test_fingerprint_distinguishes_rule_and_symbol():
+    fs = _df({"p.core.m": (
+        "import jax\n"
+        "def k1():\n"
+        "    return jax.random.PRNGKey(0)\n"
+        "def k2():\n"
+        "    return jax.random.PRNGKey(7)\n",
+        "src/repro/core/m.py")})
+    fps = {f.fingerprint for f in fs}
+    assert len(fps) == len(fs) == 2
+
+
+def test_baseline_round_trip(tmp_path):
+    """--update-baseline then --baseline exits 0; a planted violation
+    in the tree afterwards still exits 1."""
+    bl = tmp_path / "bl.json"
+    wrote = _cli("--check", "all", "--update-baseline", str(bl))
+    assert wrote.returncode == 0, wrote.stdout + wrote.stderr
+    ok = _cli("--check", "all", "--baseline", str(bl))
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+    planted = REPO / "src/repro/core/_planted_analysis_smoke.py"
+    try:
+        planted.write_text("import numpy as np\n"
+                           "x = np.random.rand(3)\n")
+        bad = _cli("--check", "all", "--baseline", str(bl))
+        assert bad.returncode == 1, bad.stdout + bad.stderr
+        assert "unseeded-rng" in bad.stdout
+    finally:
+        planted.unlink()
+
+
+def test_shipped_baseline_is_tight():
+    """Every fingerprint in the committed baseline matches a live
+    finding — stale entries would mask future regressions."""
+    live = {f.fingerprint for f in run_checks("all")}
+    baseline = load_baseline()
+    stale = set(baseline) - live
+    assert not stale, \
+        f"stale baseline entries: " \
+        f"{ {fp: baseline[fp] for fp in stale} }"
