@@ -23,7 +23,22 @@ wall-time telemetry.
 ``--kinds`` accepts the base kinds, ``mixed`` (per-failure kinds sampled
 from the live core/link/router population) and ``core+link``-style
 composites; ``--severities`` accepts plain slowdown factors and
-``linspace:LO:HI:N`` sweep specs.  Campaigns with several severities
+``linspace:LO:HI:N`` sweep specs.
+
+``--mesh`` / ``--topology`` entries share one fabric-spec grammar,
+resolved through the topology registry (``core.routing``)::
+
+    W | WxH            default mesh, e.g. --mesh 12x8
+    name:WxH           registered fabric, e.g. --topology torus:8x8
+    name:WxH:variant   fabric variant, e.g. --topology het:4x4:fast2slow1
+
+Registered builtins: ``mesh`` (bidirectional 2D mesh, XY routing),
+``torus`` (wrap links, shortest-direction DOR), ``systolic``
+(unidirectional east/south dataflow with edge re-injection), ``het``
+(mesh with a ``fast<A>slow<B>`` rate-class pattern).  Third-party
+fabrics join via ``register_topology(name, cls)`` and are then valid in
+the same specs.  Campaigns spanning more than one fabric print the
+``per fabric`` accuracy/FPR table.  Campaigns with several severities
 print the ``severity_curve()`` readout; mixed-kind campaigns print the
 per-truth-kind recall split.
 
@@ -87,9 +102,10 @@ def make_grid(args) -> CampaignGrid:
     n_failures = tuple(args.n_failures) if args.n_failures else (1,)
     kinds = (tuple(args.kinds) if args.kinds
              else ("core", "link", "router", "none"))
+    meshes = tuple(args.mesh or ()) + tuple(args.topology or ())
     if args.tiny:
         return CampaignGrid(workloads=("darknet19",),
-                            meshes=tuple(args.mesh) if args.mesh else (4,),
+                            meshes=meshes if meshes else (4,),
                             kinds=kinds,
                             severities=(tuple(args.severities)
                                         if args.severities else (8.0,)),
@@ -97,7 +113,7 @@ def make_grid(args) -> CampaignGrid:
                             reps=1, campaign_seed=args.seed)
     return CampaignGrid(
         workloads=("darknet19", "googlenet", "binary_tree"),
-        meshes=tuple(args.mesh) if args.mesh else (4, 6),
+        meshes=meshes if meshes else (4, 6),
         kinds=kinds,
         severities=(tuple(args.severities) if args.severities
                     else (5.0, 10.0)),
@@ -125,6 +141,13 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", action="append", default=None, metavar="WxH",
                     help="mesh axis entry, 'W' or 'WxH' "
                          "(repeatable, e.g. --mesh 12x12 --mesh 16x8)")
+    ap.add_argument("--topology", action="append", default=None,
+                    metavar="SPEC",
+                    help="fabric axis entry, 'name:WxH[:variant]' with "
+                         "name from the topology registry — mesh | torus "
+                         "| systolic | het (repeatable, e.g. --topology "
+                         "torus:8x8 --topology het:4x4:fast2slow1; "
+                         "combines with --mesh entries on one axis)")
     ap.add_argument("--kinds", action="append", default=None, metavar="K",
                     help="failure-kind axis entry: core | link | router | "
                          "none | mixed | 'core+link'-style composite "
@@ -288,8 +311,9 @@ def main(argv=None) -> int:
               f"compression ratios"
               + (", detection latencies" if args.streaming else "") + ")")
 
-    print(f"\n== per-cell (workload, mesh, kind, severity, n_failures) ==")
-    for (wl, w, h, kind, sev, nf), m in res.cells.items():
+    print(f"\n== per-cell (workload, fabric, kind, severity, "
+          f"n_failures) ==")
+    for (wl, w, h, kind, sev, nf, topo), m in res.cells.items():
         if kind == "none":
             stat = f"FPR {m.fpr.pct():6.2f}% ({m.fpr.successes}/{m.fpr.trials})"
         else:
@@ -297,7 +321,7 @@ def main(argv=None) -> int:
                     f"({m.accuracy.successes}/{m.accuracy.trials}) "
                     f"top3 {m.topk_rate(3)*100:6.2f}% "
                     f"recall@3 {m.recall_at(3)*100:6.2f}%")
-        print(f"  {wl:12s} {w}x{h} {kind:9s} x{_sev_str(sev):<8s} "
+        print(f"  {wl:12s} {topo}:{w}x{h} {kind:9s} x{_sev_str(sev):<8s} "
               f"k={nf} {stat}")
 
     if len(detectors) > 1:

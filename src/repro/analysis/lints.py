@@ -22,9 +22,17 @@ contract machine-checked over ``core/``, ``kernels/``, ``mitigate/``,
   ``apply``) that never reaches its registry
   (``register_detector`` / ``_register_builtin`` for detectors,
   ``register_policy`` / ``_register_builtin_policy`` for policies)
-  grows a side API the campaign can't see; the resolver follows both
-  direct registration calls and the ``ALL_BASELINES``-style pattern (a
-  module list of classes swept by a ``for`` loop that registers each).
+  or topology-shaped class (concrete ``route`` + ``hops`` methods —
+  the fabric surface ``core.routing`` registers behind
+  ``register_topology`` / ``_register_builtin_topology``, alongside
+  ``links_of_router``/``n_cores`` from the shared base) that never
+  reaches its registry grows a side API the campaign can't see; the
+  resolver follows both direct registration calls and the
+  ``ALL_BASELINES``-style pattern (a module list of classes swept by a
+  ``for`` loop that registers each).  Abstract fabric shells (``route``
+  and ``hops`` both just ``raise NotImplementedError``) and delegating
+  wrappers (``route`` without ``hops``, like ``DetourTopology``) are
+  not registrable fabrics and stay exempt.
 * ``set-iteration`` — materialising a ``set`` in an order-sensitive
   position (``list()``/``tuple()``/``enumerate()``, a ``for`` loop, or
   a list/generator comprehension).  Python set order varies with hash
@@ -68,7 +76,8 @@ _WALLCLOCK_DT_FNS = {"now", "utcnow", "today"}
 _LEGACY_NP_RANDOM_OK = {"Generator", "default_rng", "SeedSequence",
                         "PCG64", "Philox", "BitGenerator"}
 _REGISTER_FNS = {"register_detector", "_register_builtin",
-                 "register_policy", "_register_builtin_policy"}
+                 "register_policy", "_register_builtin_policy",
+                 "register_topology", "_register_builtin_topology"}
 _ORDER_FREE = {"sorted", "min", "max", "sum", "len", "any", "all",
                "set", "frozenset"}
 _ORDERED_CONSUMERS = {"list", "tuple", "enumerate"}
@@ -211,9 +220,13 @@ def _detector_classes(tree: ast.Module) \
         -> list[tuple[ast.ClassDef, str]]:
     """Public classes matching a registry duck type, tagged with which:
     a string ``name`` attribute plus ``prepare`` + ``analyse``
-    (``"detector"``, the shape ``core.detectors`` registers) or plus
+    (``"detector"``, the shape ``core.detectors`` registers), or plus
     ``plan`` + ``apply`` (``"policy"``, the shape ``mitigate.policy``
-    registers)."""
+    registers), or concrete ``route`` + ``hops`` methods
+    (``"topology"``, the fabric shape ``core.routing`` registers —
+    no ``name`` attribute required).  Abstract fabric shells (both
+    methods just ``raise NotImplementedError``) are base classes, not
+    registrable fabrics, and are skipped."""
     out = []
     for node in tree.body:
         if not isinstance(node, ast.ClassDef) or \
@@ -226,16 +239,34 @@ def _detector_classes(tree: ast.Module) \
             and isinstance(s.value, ast.Constant)
             and isinstance(s.value.value, str)
             for s in node.body)
-        if not has_name:
-            continue
-        methods = {s.name for s in node.body
-                   if isinstance(s, (ast.FunctionDef,
-                                     ast.AsyncFunctionDef))}
-        if {"prepare", "analyse"} <= methods:
+        defs = {s.name: s for s in node.body
+                if isinstance(s, (ast.FunctionDef,
+                                  ast.AsyncFunctionDef))}
+        methods = set(defs)
+        if has_name and {"prepare", "analyse"} <= methods:
             out.append((node, "detector"))
-        elif {"plan", "apply"} <= methods:
+        elif has_name and {"plan", "apply"} <= methods:
             out.append((node, "policy"))
+        elif {"route", "hops"} <= methods and not all(
+                _is_abstract_stub(defs[m]) for m in ("route", "hops")):
+            out.append((node, "topology"))
     return out
+
+
+def _is_abstract_stub(fn: ast.FunctionDef) -> bool:
+    """True when a method body is nothing but ``raise
+    NotImplementedError`` (after an optional docstring)."""
+    body = fn.body
+    if body and isinstance(body[0], ast.Expr) \
+            and isinstance(body[0].value, ast.Constant) \
+            and isinstance(body[0].value.value, str):
+        body = body[1:]
+    if len(body) != 1 or not isinstance(body[0], ast.Raise):
+        return False
+    exc = body[0].exc
+    if isinstance(exc, ast.Call):
+        exc = exc.func
+    return isinstance(exc, ast.Name) and exc.id == "NotImplementedError"
 
 
 def _registered_names(tree: ast.Module) -> set[str]:
@@ -295,6 +326,8 @@ def _lint_detectors(tree: ast.Module, source: str, path: str) \
                      "register_detector / _register_builtin"),
         "policy": ("mitigation-policy-shaped (name + plan + apply)",
                    "register_policy / _register_builtin_policy"),
+        "topology": ("topology-shaped (concrete route + hops)",
+                     "register_topology / _register_builtin_topology"),
     }
     findings = []
     for cls, kind in classes:
@@ -471,7 +504,12 @@ _SYNTHETIC = {
         "    def plan(self, verdict, mapped, mesh, cfg=None):\n"
         "        return None\n"
         "    def apply(self, plan, mapped, cfg=None):\n"
-        "        return mapped\n"),
+        "        return mapped\n"
+        "class RogueTopo:\n"
+        "    def route(self, src, dst):\n"
+        "        return []\n"
+        "    def hops(self, src, dst):\n"
+        "        return 0\n"),
     "set-iteration": (
         "def f(xs):\n"
         "    used = set(xs)\n"
@@ -502,6 +540,20 @@ _SYNTHETIC_CLEAN = (
     "    def apply(self, plan, mapped, cfg=None):\n"
     "        return mapped\n"
     "register_policy('finepol', FinePolicy)\n"
+    "class FineTopo:\n"
+    "    def route(self, src, dst):\n"
+    "        return []\n"
+    "    def hops(self, src, dst):\n"
+    "        return 0\n"
+    "register_topology('finetopo', FineTopo)\n"
+    "class AbstractFabric:\n"
+    "    def route(self, src, dst):\n"
+    "        raise NotImplementedError\n"
+    "    def hops(self, src, dst):\n"
+    "        raise NotImplementedError\n"
+    "class DetourWrapper:\n"
+    "    def route(self, src, dst):\n"
+    "        return list(self.base.route(src, dst))\n"
     "def g(xs, links):\n"
     "    used = set(xs)\n"
     "    routers = {c for lid in used for c in links[lid]}\n"
@@ -526,8 +578,8 @@ def self_test() -> None:
     planted = lint_source(_SYNTHETIC["unregistered-detector"],
                           "<synthetic>")
     caught = {f.message.split()[1] for f in planted}
-    assert {"Rogue", "RoguePolicy"} <= caught, \
-        f"both registry duck types must be caught (got {caught})"
+    assert {"Rogue", "RoguePolicy", "RogueTopo"} <= caught, \
+        f"all three registry duck types must be caught (got {caught})"
     benign = lint_source(_SYNTHETIC_CLEAN, "<synthetic-clean>")
     assert benign == [], \
         "false positives on benign shapes:\n" + "\n".join(

@@ -39,7 +39,7 @@ import warnings
 import numpy as np
 
 from .detectors import Verdict, _register_builtin
-from .routing import Mesh2D
+from .routing import Topology
 from .simulator import SimResult
 
 __all__ = ["Thres", "Mscope", "IASO", "Perseus", "ADR", "ALL_BASELINES",
@@ -73,7 +73,7 @@ def _per_core_rates(sim: SimResult):
     return comp["core"], comp["stage"], rate, dur
 
 
-def _per_link_latency(sim: SimResult, mesh: Mesh2D):
+def _per_link_latency(sim: SimResult, mesh: Topology):
     comm = sim.comm
     lat = {}
     for s, d, svc in zip(comm["src"], comm["dst"], comm["service"]):
@@ -96,13 +96,13 @@ class _Baseline:
 
     name = "baseline"
 
-    def __init__(self, mesh: Mesh2D | None = None,
+    def __init__(self, mesh: Topology | None = None,
                  profile: SimResult | None = None):
-        self.mesh: Mesh2D | None = None
+        self.mesh: Topology | None = None
         if mesh is not None and profile is not None:
             self.prepare(None, mesh, profile)
 
-    def prepare(self, graph, mesh: Mesh2D, profile: SimResult,
+    def prepare(self, graph, mesh: Topology, profile: SimResult,
                 cfg=None) -> "_Baseline":
         """Fit nominal models against a healthy profiling run.  ``graph``
         and ``cfg`` (a ``SlothConfig``) are accepted for protocol
@@ -111,7 +111,7 @@ class _Baseline:
         self._fit(mesh, profile)
         return self
 
-    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+    def _fit(self, mesh: Topology, profile: SimResult) -> None:
         raise NotImplementedError
 
     def analyse(self, sim: SimResult) -> Verdict:
@@ -176,7 +176,7 @@ class Thres(_Baseline):
     flag_ratio = 2.0
     rank_floor = 1.25          # include near-statistic resources
 
-    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+    def _fit(self, mesh: Topology, profile: SimResult) -> None:
         cores, stages, rate, _ = _per_core_rates(profile)
         self.nominal = {}
         for c, s, r in zip(cores, stages, rate):
@@ -226,7 +226,7 @@ class Mscope(_Baseline):
     walks = 200
     walk_seed = 0
 
-    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+    def _fit(self, mesh: Topology, profile: SimResult) -> None:
         cores, stages, rate, _ = _per_core_rates(profile)
         self.nominal = {}
         for c, s, r in zip(cores, stages, rate):
@@ -305,7 +305,7 @@ def _dbscan_1d(x: np.ndarray, eps: float, min_pts: int = 3) -> np.ndarray:
 class IASO(_Baseline):
     name = "iaso"
 
-    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+    def _fit(self, mesh: Topology, profile: SimResult) -> None:
         cores, stages, rate, dur = _per_core_rates(profile)
         self.expected = {}
         for c, s, d in zip(cores, stages, dur):
@@ -361,7 +361,7 @@ class IASO(_Baseline):
 class Perseus(_Baseline):
     name = "perseus"
 
-    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+    def _fit(self, mesh: Topology, profile: SimResult) -> None:
         cores, stages, rate, dur = _per_core_rates(profile)
         x = np.log(np.maximum(profile.comp["flops"], 1.0))
         y = np.log(np.maximum(dur, 1e-12))
@@ -401,7 +401,7 @@ class ADR(_Baseline):
     flag_ratio = 1.5
     rank_floor = 1.1           # include near-threshold window drops
 
-    def _fit(self, mesh: Mesh2D, profile: SimResult) -> None:
+    def _fit(self, mesh: Topology, profile: SimResult) -> None:
         pass                     # purely self-referential, no nominal model
 
     def analyse(self, sim: SimResult) -> Verdict:

@@ -20,7 +20,16 @@ with ``kind ∈ {'core', 'link', 'router', 'none', 'mixed'}`` or an explicit
 per-failure kind tuple.  Mesh entries may be a square width ``W``, a
 ``(W, H)`` pair or a ``'WxH'`` string — they are normalised to ``(W, H)``
 tuples at grid construction, so rectangular meshes (``12×8``, ``16×8``, …)
-flow through scenario keys, cache keys and metric cells unchanged.
+flow through scenario keys, cache keys and metric cells unchanged.  A
+mesh entry may also be a full fabric spec ``'name:WxH[:variant]'``
+(``'torus:8x8'``, ``'systolic:8x8'``, ``'het:4x4:fast2slow1'``) resolved
+through the topology registry (:mod:`repro.core.routing`); such entries
+normalise to a canonical spec string, the topology name rides through
+``Scenario.topology`` / cache keys / metric cells, and
+``CampaignResult.by_topology()`` splits results per fabric.  Plain
+``W``/``'WxH'`` entries stay the default mesh and stay bit-identical to
+the pre-topology pipeline (the RNG key only grows a topology word on
+non-mesh fabrics).
 ``n_failures`` entries are k ≥ 1 *simultaneous* failures at k distinct
 locations (ground truth becomes a set; see ``metrics.py`` for any-match
 accuracy and per-failure recall@k).
@@ -200,10 +209,11 @@ from .graph import build_workload
 from .metrics import (CampaignMetrics, DetectorOutcome, MitigationOutcome,
                       MitigationStat, ScenarioOutcome, SeverityPoint,
                       TruthKindMetrics, aggregate, by_detector,
-                      by_mitigation, by_truth_kind, deployment_overheads,
+                      by_mitigation, by_topology, by_truth_kind,
+                      deployment_overheads,
                       detector_cells, severity_curve, severity_curve_by_mesh,
                       wall_time_stats)
-from .routing import Mesh2D
+from .routing import build_topology, parse_topology_spec, topology_spec
 from .simulator import SimResult, simulate, simulate_mitigated
 from .sloth import Sloth, SlothConfig, SlothDetector
 # submodule import (not the package) so a partially-initialised
@@ -300,6 +310,22 @@ def _mesh_dims(mesh) -> tuple[int, int]:
     if w < 1 or h < 1:
         raise ValueError(f"mesh dimensions must be >= 1, got {w}x{h}")
     return w, h
+
+
+def _normalise_mesh(mesh):
+    """Normalise one grid fabric entry.
+
+    Plain mesh spellings — ``12`` | ``(12, 8)`` | ``'12x8'`` — keep their
+    historical ``(width, height)`` tuple form (so existing grids compare,
+    hash and RNG-key bit-identically); registry topology specs —
+    ``'torus:8x8'``, ``'systolic:8x8'``, ``'het:4x4:fast2slow1'`` — are
+    canonicalised to their spec string (see
+    :func:`repro.core.routing.parse_topology_spec` for the grammar).
+    """
+    if isinstance(mesh, str) and ":" in mesh:
+        topo, w, h = parse_topology_spec(mesh)
+        return topology_spec(topo, w, h)
+    return _mesh_dims(mesh)
 
 
 def _per_failure_severities(e) -> tuple[float, ...]:
@@ -482,7 +508,7 @@ class CampaignGrid:
         if not self.n_failures or any(int(k) < 1 for k in self.n_failures):
             raise ValueError("n_failures entries must be >= 1")
         object.__setattr__(self, "meshes",
-                           tuple(_mesh_dims(m) for m in self.meshes))
+                           tuple(_normalise_mesh(m) for m in self.meshes))
         object.__setattr__(self, "severities",
                            _expand_severities(self.severities))
         object.__setattr__(self, "n_failures",
@@ -532,18 +558,23 @@ class Scenario:
     severity: float | tuple[float, ...]   # tuple = per-failure mix
     n_failures: int        # 0 for 'none' scenarios
     rep: int
+    # registry fabric key, optionally 'name:variant' ('het:fast2slow1');
+    # 'mesh' is the historical default and keeps its RNG stream and cache
+    # keys bit-identical
+    topology: str = "mesh"
 
 
 def enumerate_scenarios(grid: CampaignGrid) -> list[Scenario]:
     """Fixed nested-loop enumeration; scenario_id is the stable index."""
     out: list[Scenario] = []
     for wl in grid.workloads:
-        for w, h in grid.meshes:
+        for mesh in grid.meshes:
+            topo, w, h = parse_topology_spec(mesh)
             for kind in grid.kinds:
                 for sev, nf in grid._cells_for_kind(kind):
                     for rep in range(grid.reps):
                         out.append(Scenario(len(out), wl, w, h, kind,
-                                            sev, nf, rep))
+                                            sev, nf, rep, topo))
     return out
 
 
@@ -589,9 +620,17 @@ def _scenario_rng(grid: CampaignGrid, s: Scenario) -> np.random.Generator:
     would collide e.g. 'resnet50_v1'/'resnet50_v2' onto one stream — the
     same truncation class the severity/kind keys guard against)."""
     wl_key = int.from_bytes(s.workload.encode().ljust(8, b"\0"), "big")
-    return np.random.default_rng(
-        [grid.campaign_seed, wl_key, s.mesh_w, s.mesh_h,
-         _kind_key(s.kind), _severity_key(s.severity), s.n_failures, s.rep])
+    key = [grid.campaign_seed, wl_key, s.mesh_w, s.mesh_h,
+           _kind_key(s.kind), _severity_key(s.severity), s.n_failures,
+           s.rep]
+    if s.topology != "mesh":
+        # Non-mesh fabrics fold their full registry key ('torus',
+        # 'het:fast2slow1', ...) as an extra entropy word; the default
+        # mesh keeps its historical 8-word key so pre-topology campaign
+        # recordings stay bit-identical.
+        key.append(int.from_bytes(s.topology.encode().ljust(8, b"\0"),
+                                  "big"))
+    return np.random.default_rng(key)
 
 
 # ---------------------------------------------------------------------------
@@ -633,11 +672,13 @@ class DeploymentCache:
         self._cache: dict[tuple, Deployment] = {}
 
     def _host(self, workload: str, mesh_w: int, mesh_h: int,
-              cfg: SlothConfig, hostkey: tuple) -> Deployment:
+              cfg: SlothConfig, hostkey: tuple,
+              topology: str = "mesh") -> Deployment:
         host = self._hosts.get(hostkey)
         if host is None:
             sloth = Sloth(build_workload(workload),
-                          Mesh2D(mesh_w, mesh_h), cfg=cfg)
+                          build_topology(topology, mesh_w, mesh_h),
+                          cfg=cfg)
             healthy = sloth.run(None, seed=self.HEALTHY_SEED)
             used = set()
             for s, d in zip(healthy.comm["src"], healthy.comm["dst"]):
@@ -660,14 +701,16 @@ class DeploymentCache:
     def get(self, workload: str, mesh_w: int, mesh_h: int,
             cfg: SlothConfig | None = None,
             detectors=("sloth",),
-            baselines: bool | None = None) -> Deployment:
+            baselines: bool | None = None,
+            topology: str = "mesh") -> Deployment:
         names = _normalise_detectors(detectors, baselines)
         cfg = cfg if cfg is not None else SlothConfig()
-        hostkey = (workload, mesh_w, mesh_h, repr(cfg))
+        hostkey = (workload, topology, mesh_w, mesh_h, repr(cfg))
         key = hostkey + (names,)
         dep = self._cache.get(key)
         if dep is None:
-            host = self._host(workload, mesh_w, mesh_h, cfg, hostkey)
+            host = self._host(workload, mesh_w, mesh_h, cfg, hostkey,
+                              topology=topology)
             dets = []
             for n in names:
                 det = self._detectors.get(hostkey + (n,))
@@ -954,6 +997,7 @@ def run_scenario(grid: CampaignGrid, s: Scenario, dep: Deployment,
     return ScenarioOutcome(
         scenario_id=s.scenario_id, workload=s.workload,
         mesh_w=s.mesh_w, mesh_h=s.mesh_h, kind=s.kind,
+        topology=s.topology,
         severity=s.severity, n_failures=len(failures), rep=s.rep,
         sim_seed=sim_seed,
         truth_locations=tuple(f.location for f in failures),
@@ -977,7 +1021,8 @@ def _run_in_worker(grid: CampaignGrid, cfg: SlothConfig | None,
     """Process-pool entry point: resolve the deployment from this worker
     process's own cache (lazily built), then run the scenario."""
     dep = _WORKER_CACHE.get(s.workload, s.mesh_w, s.mesh_h,
-                            cfg=cfg, detectors=detectors)
+                            cfg=cfg, detectors=detectors,
+                            topology=s.topology)
     return run_scenario(grid, s, dep, streaming=streaming,
                         mitigation=mitigation)
 
@@ -1025,6 +1070,15 @@ class CampaignResult:
         return severity_curve_by_mesh(self.outcomes, ks=ks,
                                       detector=detector)
 
+    def by_topology(self, detector: str | None = None,
+                    ks: tuple[int, ...] = (1, 3, 5)) \
+            -> dict[str, CampaignMetrics]:
+        """Campaign metrics split per deployment fabric, keyed by the
+        canonical topology spec (``'mesh:4x4'``, ``'torus:8x8'``,
+        ``'het:4x4:fast2slow1'``) — the paper's cross-architecture
+        readout for one detector (``None`` → primary)."""
+        return by_topology(self.outcomes, ks=ks, detector=detector)
+
     def by_truth_kind(self, detector: str | None = None,
                       ks: tuple[int, ...] = (1, 3, 5)) \
             -> dict[str, TruthKindMetrics]:
@@ -1071,6 +1125,14 @@ class CampaignResult:
                     f"{dm.fpr.pct():6.2f}% "
                     f"{dm.topk_rate(3)*100:6.2f}% "
                     f"{dm.recall_at(3)*100:6.2f}%")
+        by_topo = self.by_topology()
+        if len(by_topo) > 1:
+            lines.append("per fabric (acc / FPR / recall@3):")
+            for label, tm in by_topo.items():
+                lines.append(
+                    f"  {label:20s} {tm.accuracy.pct():6.2f}% "
+                    f"{tm.fpr.pct():6.2f}% "
+                    f"{tm.recall_at(3)*100:6.2f}%  (n={tm.n_scenarios})")
         if len({o.severity for o in self.outcomes if o.positive}) > 1:
             by_mesh = self.severity_curve_by_mesh()
             if len(by_mesh) > 1:
@@ -1204,14 +1266,16 @@ def run_campaign(grid: CampaignGrid, *, workers: int | None = None,
         # state.
         deps: dict[tuple, Deployment] = {}
         for s in scenarios:
-            k = (s.workload, s.mesh_w, s.mesh_h)
+            k = (s.workload, s.topology, s.mesh_w, s.mesh_h)
             if k not in deps:
                 deps[k] = cache.get(s.workload, s.mesh_w, s.mesh_h,
-                                    cfg=cfg, detectors=names)
+                                    cfg=cfg, detectors=names,
+                                    topology=s.topology)
 
         def run_one(s: Scenario) -> ScenarioOutcome:
             o = run_scenario(grid, s,
-                             deps[(s.workload, s.mesh_w, s.mesh_h)],
+                             deps[(s.workload, s.topology,
+                                   s.mesh_w, s.mesh_h)],
                              streaming=streaming, mitigation=pols)
             if progress is not None:
                 progress(o)

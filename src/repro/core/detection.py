@@ -25,7 +25,7 @@ import math
 import numpy as np
 
 from . import probes as P
-from .routing import Mesh2D
+from .routing import Topology
 from .sketch import Pattern
 
 # ---------------------------------------------------------------------------
@@ -91,8 +91,17 @@ def assign_window(t_mid: np.ndarray, total_time: float,
 
 def detect_cores(patterns: list[Pattern], total_time: float,
                  n_windows: int = 4, z_flag: float = 2.5,
-                 min_group: int = 3) -> list[CoreCandidate]:
-    """Stage-aware group outlier detection on compute patterns."""
+                 min_group: int = 3,
+                 rate_scale=None) -> list[CoreCandidate]:
+    """Stage-aware group outlier detection on compute patterns.
+
+    ``rate_scale`` — optional per-core baseline-capacity multipliers (a
+    fabric's :attr:`~repro.core.routing.Topology.rate_class`): observed
+    FLOP/s are divided by the core's nominal rate before grouping, so a
+    healthy slow-class core on a heterogeneous fabric is not flagged as a
+    fail-slow outlier against its full-rate peers.  All-ones (or ``None``)
+    leaves the historical rates bit-identical.
+    """
     if not patterns:
         return []
     keys = np.array([p.key for p in patterns], dtype=np.int64)
@@ -100,6 +109,8 @@ def detect_cores(patterns: list[Pattern], total_time: float,
     stages = ((keys >> 12) & 0xFFFF).astype(np.int64)
     group_sig = keys >> 12          # stage | op | flops-bucket (drop core)
     rate = np.array([p.sum_val / max(p.sum_dur, 1e-12) for p in patterns])
+    if rate_scale is not None:
+        rate = rate / np.asarray(rate_scale, dtype=np.float64)[cores]
     t_mid = np.array([(p.t_first + p.t_last) / 2 for p in patterns])
     windows = assign_window(t_mid, total_time, n_windows)
 
@@ -185,7 +196,7 @@ def em_link_inverse_bw(A: np.ndarray, T: np.ndarray, V: np.ndarray,
     return theta
 
 
-def detect_links(patterns: list[Pattern], mesh: Mesh2D, total_time: float,
+def detect_links(patterns: list[Pattern], mesh: Topology, total_time: float,
                  n_windows: int = 4, hop_latency: float = 50e-9,
                  ratio_flag: float = 3.0, em_iters: int = 60) -> LinkInference:
     """Link-level inference in two passes.

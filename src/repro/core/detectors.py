@@ -34,7 +34,7 @@ import dataclasses
 from typing import TYPE_CHECKING, Callable, Protocol, runtime_checkable
 
 from .failures import FailSlow, truth_candidates
-from .routing import Mesh2D
+from .routing import Topology
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from .failrank import FailRankResult
@@ -80,12 +80,12 @@ class Verdict:
     # kind/location additionally weigh FailRank attribution, so the two
     # orderings may disagree on which resource comes first.
     flagged_resources: tuple[tuple[str, int, float], ...] = ()
-    mesh: Mesh2D | None = dataclasses.field(
+    mesh: Topology | None = dataclasses.field(
         default=None, repr=False, compare=False)
     detector: str = ""            # registry name of the producing detector
 
     def matches(self, failure: FailSlow | None,
-                mesh: Mesh2D | None = None) -> bool:
+                mesh: Topology | None = None) -> bool:
         """Correctness of this verdict against ground truth, router-aware:
         a router truth is matched by any link of the slowed router (the
         detector only localises cores and links)."""
@@ -125,7 +125,7 @@ class Detector(Protocol):
 
     name: str
 
-    def prepare(self, graph: "CompGraph", mesh: Mesh2D,
+    def prepare(self, graph: "CompGraph", mesh: Topology,
                 profile: "SimResult", cfg=None) -> "Detector":
         ...                                          # pragma: no cover
 
@@ -210,7 +210,7 @@ def instantiate_detector(name: str) -> Detector:
     return det
 
 
-def prepare_detector(name: str, graph: "CompGraph", mesh: Mesh2D,
+def prepare_detector(name: str, graph: "CompGraph", mesh: Topology,
                      profile: "SimResult", cfg=None) -> Detector:
     """Convenience: resolve, instantiate and prepare in one call."""
     return instantiate_detector(name).prepare(graph, mesh, profile, cfg)

@@ -25,7 +25,7 @@ import dataclasses
 
 import numpy as np
 
-from .routing import Mesh2D
+from .routing import Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,7 +40,7 @@ class FailSlow:
         return (self.kind, self.location)
 
 
-def truth_candidates(failure: FailSlow, mesh: Mesh2D) \
+def truth_candidates(failure: FailSlow, mesh: Topology) \
         -> set[tuple[str, int]]:
     """Acceptable (kind, location) verdicts for an injected failure.
 
@@ -54,7 +54,7 @@ def truth_candidates(failure: FailSlow, mesh: Mesh2D) \
     return {(failure.kind, failure.location)}
 
 
-def judge_verdict(verdict, failures, mesh: Mesh2D) \
+def judge_verdict(verdict, failures, mesh: Topology) \
         -> tuple[bool, int | None, tuple, set[tuple[str, int]]]:
     """(matched, best_rank, per_failure_ranks, candidate_union) for one
     verdict against a set of ground truths — the single judging rule every
@@ -100,7 +100,7 @@ class Sample:
 
 def effective_samples(samples: list[Sample], healthy_total: float,
                       used_links: set[int] | None = None,
-                      mesh: Mesh2D | None = None) -> list[Sample]:
+                      mesh: Topology | None = None) -> list[Sample]:
     """Drop positive samples that cannot affect execution (the paper:
     "failures ... occurring on unused resources are excluded"): failures
     starting after the run completes, links that carry no traffic, and —
@@ -127,7 +127,7 @@ def effective_samples(samples: list[Sample], healthy_total: float,
     return out
 
 
-def make_dataset(mesh: Mesh2D, n_failures: int = 152, seed: int = 7,
+def make_dataset(mesh: Topology, n_failures: int = 152, seed: int = 7,
                  core_link_ratio: float = 0.7, max_t0: float = 6.0,
                  slowdown: float = 10.0, base_cores: int = 16,
                  n_negatives: int | None = None,

@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 from .graph import CompGraph
-from .routing import Mesh2D
+from .routing import Topology
 
 
 @dataclasses.dataclass
@@ -48,7 +48,7 @@ class Flow:
 @dataclasses.dataclass
 class MappedGraph:
     graph: CompGraph
-    mesh: Mesh2D
+    mesh: Topology
     tasks: list[Task]
     flows: list[Flow]
 
@@ -71,7 +71,7 @@ def _n_parts_for(flops: float, median_flops: float, n_cores: int) -> int:
     return 1 << (p.bit_length() - 1)
 
 
-def map_graph(graph: CompGraph, mesh: Mesh2D, shuffle_fanin: int = 2,
+def map_graph(graph: CompGraph, mesh: Topology, shuffle_fanin: int = 2,
               seed: int = 0, max_parts: int | None = None,
               exclude_cores=()) -> MappedGraph:
     """Partition every operator into volume-equivalent parts on the mesh.

@@ -18,13 +18,13 @@ import dataclasses
 import numpy as np
 
 from .detection import (CoreCandidate, LinkInference, assign_window)
-from .routing import Mesh2D
+from .routing import Topology
 from .sketch import Pattern
 
 
 @dataclasses.dataclass
 class MCG:
-    mesh: Mesh2D
+    mesh: Topology
     n_windows: int
     n_nodes: int                     # windows*cores + windows (DRAM)
     # edges (COO): weights normalised per source node
@@ -52,7 +52,7 @@ class MCG:
 DRAM_EDGE_WEIGHT = 0.1   # relative weight of inter-level (memory) edges
 
 
-def build_mcg(comm_patterns: list[Pattern], mesh: Mesh2D, total_time: float,
+def build_mcg(comm_patterns: list[Pattern], mesh: Topology, total_time: float,
               core_cands: list[CoreCandidate], link_inf: LinkInference,
               n_windows: int = 4) -> MCG:
     n_cores = mesh.n_cores

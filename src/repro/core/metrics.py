@@ -82,6 +82,8 @@ import dataclasses
 import math
 import warnings
 
+from .routing import topology_spec
+
 
 @dataclasses.dataclass(frozen=True)
 class DetectorOutcome:
@@ -215,6 +217,11 @@ class ScenarioOutcome:
     # one mitigation attempt per (detector, policy) pair, detector-major
     # in request order; empty on campaigns without ``mitigation=``
     mitigation_results: tuple[MitigationOutcome, ...] = ()
+    # registry fabric key ('mesh' | 'torus' | 'het:fast2slow1' | ...);
+    # 'mesh' both for default fabrics and for outcomes predating the
+    # topology axis.  Joined with (mesh_w, mesh_h) into the canonical
+    # fabric label by ``topology_label`` / ``by_topology``.
+    topology: str = "mesh"
 
     @property
     def positive(self) -> bool:
@@ -320,11 +327,18 @@ class ScenarioOutcome:
             f"{tuple((m.detector, m.policy) for m in self.mitigation_results)}")
 
     def cell(self) -> tuple:
+        # topology is appended (not inserted) so positional consumers of
+        # the historical 6 fields keep their indices
         return (self.workload, self.mesh_w, self.mesh_h, self.kind,
-                self.severity, self.n_failures)
+                self.severity, self.n_failures, self.topology)
 
     def deploy_key(self) -> tuple:
-        return (self.workload, self.mesh_w, self.mesh_h)
+        return (self.workload, self.topology, self.mesh_w, self.mesh_h)
+
+    def topology_label(self) -> str:
+        """Canonical fabric spec of this scenario's deployment
+        (``'mesh:4x4'``, ``'torus:8x8'``, ``'het:4x4:fast2slow1'``)."""
+        return topology_spec(self.topology, self.mesh_w, self.mesh_h)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -763,6 +777,22 @@ def severity_curve(outcomes: list[ScenarioOutcome],
             severity=sev, n_scenarios=len(outs), accuracy=acc, fpr=fpr,
             recall=tuple((k, BinomialStat(hits[k], trials)) for k in ks)))
     return tuple(points)
+
+
+def by_topology(outcomes: list[ScenarioOutcome],
+                ks: tuple[int, ...] = (1, 3, 5),
+                detector: str | None = None) \
+        -> dict[str, CampaignMetrics]:
+    """Campaign metrics split per deployment fabric, keyed by the
+    canonical topology spec (``'mesh:4x4'``, ``'torus:8x8'``,
+    ``'het:4x4:fast2slow1'``) in first-occurrence order — the paper's
+    cross-architecture readout.  Each fabric's FPR uses that fabric's
+    own negative scenarios."""
+    groups: dict[str, list[ScenarioOutcome]] = {}
+    for o in outcomes:
+        groups.setdefault(o.topology_label(), []).append(o)
+    return {t: aggregate(v, ks=ks, detector=detector)
+            for t, v in groups.items()}
 
 
 def severity_curve_by_mesh(outcomes: list[ScenarioOutcome],

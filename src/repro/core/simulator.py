@@ -31,7 +31,7 @@ import numpy as np
 
 from .failures import FailSlow
 from .mapping import MappedGraph
-from .routing import Mesh2D
+from .routing import Topology
 
 OP_TYPE_IDS = {"conv": 0, "gemm": 1, "pool": 2, "elemwise": 3, "norm": 4,
                "attention": 5, "moe_expert": 6, "ssm_scan": 7, "router": 8,
@@ -101,14 +101,18 @@ class _CoreState:
 def simulate(mapped: MappedGraph, cfg: SimConfig,
              failures: list[FailSlow] | None = None,
              probes: ProbePlan | None = None) -> SimResult:
-    mesh: Mesh2D = mapped.mesh
+    mesh: Topology = mapped.mesh
     rng = np.random.default_rng(cfg.seed)
     failures = failures or []
 
     # --- static hardware state -------------------------------------------
-    cap = cfg.mu_c * (1.0 + cfg.sigma_frac * rng.standard_normal(
+    # Per-core baseline capacity scales with the fabric's rate class
+    # (all-ones on homogeneous fabrics — multiplying by exact 1.0 keeps
+    # the historical mesh capacity draws bit-identical).
+    rate = np.asarray(getattr(mesh, "rate_class", 1.0), dtype=np.float64)
+    cap = cfg.mu_c * rate * (1.0 + cfg.sigma_frac * rng.standard_normal(
         mesh.n_cores))
-    cap = np.maximum(cap, 0.05 * cfg.mu_c)
+    cap = np.maximum(cap, 0.05 * cfg.mu_c * rate)
     link_bw = np.full(mesh.n_links, cfg.link_bw)
 
     # Each resource carries a *list* of slowdown windows: simultaneous

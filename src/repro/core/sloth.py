@@ -51,7 +51,7 @@ from .graph import CompGraph
 from .mapping import MappedGraph, map_graph
 from .mcg import MCG, build_mcg
 from .recorder import RecorderOutput, record
-from .routing import Mesh2D
+from .routing import Topology, mesh_mean_degree
 from .simulator import SimConfig, SimResult, calibrate, simulate
 from .sketch import SketchParams
 
@@ -99,6 +99,27 @@ class SlothConfig:
     ref_links: int = 48
     core_z_per_log: float = 0.75
     link_ratio_per_log: float = 2.2
+    # -- degree-aware flag scaling (non-mesh fabrics) ----------------------
+    # The resource-count terms above transfer across topology classes, but
+    # the link-EM's conditioning does not: wrap links (torus) and
+    # unidirectional dataflow links (systolic) change how many routes each
+    # link shares, smearing the per-link inverse-bandwidth estimates on
+    # healthy fabrics.  The skew grows with how far the fabric's mean
+    # router incidence sits from the same-dims reference mesh it was
+    # calibrated on, so the link flag is padded per unit of |degree
+    # difference|.  Exactly zero on every plain W×H mesh (the reference
+    # class itself), keeping historical mesh thresholds bit-identical.
+    link_ratio_per_degree: float = 0.45
+
+    def flag_thresholds(self, topo) -> tuple[float, float]:
+        """Resource-count + degree-aware ``(core_z, link_ratio)`` flags
+        for one fabric (any registered :class:`~repro.core.routing.
+        Topology`)."""
+        core_z = self.effective_core_z(topo.n_cores)
+        link_ratio = self.effective_link_ratio(topo.n_links)
+        skew = abs(topo.mean_degree()
+                   - mesh_mean_degree(topo.width, topo.height))
+        return core_z, link_ratio + self.link_ratio_per_degree * skew
 
     def effective_core_z(self, n_cores: int) -> float:
         """Core z flag scaled for a mesh of ``n_cores`` cores."""
@@ -118,7 +139,7 @@ class Sloth:
 
     name = "sloth"
 
-    def __init__(self, graph: CompGraph, mesh: Mesh2D,
+    def __init__(self, graph: CompGraph, mesh: Topology,
                  cfg: SlothConfig | None = None,
                  sim_cfg: SimConfig | None = None):
         self.graph = graph
@@ -160,10 +181,11 @@ class Sloth:
         horizon (the trace's total time post-hoc, the stream's elapsed
         clock mid-stream)."""
         cfg = self.cfg
-        core_z = cfg.effective_core_z(self.mesh.n_cores)
-        link_ratio = cfg.effective_link_ratio(self.mesh.n_links)
+        core_z, link_ratio = cfg.flag_thresholds(self.mesh)
         core_cands = detect_cores(rec.comp_patterns, total_time,
-                                  cfg.n_windows, core_z)
+                                  cfg.n_windows, core_z,
+                                  rate_scale=getattr(self.mesh,
+                                                     "rate_class", None))
         link_inf = detect_links(rec.comm_patterns, self.mesh, total_time,
                                 cfg.n_windows, self.sim_cfg.hop_latency,
                                 link_ratio)
@@ -279,7 +301,7 @@ class SlothDetector:
     def __init__(self):
         self.pipeline: Sloth | None = None
 
-    def prepare(self, graph: CompGraph, mesh: Mesh2D,
+    def prepare(self, graph: CompGraph, mesh: Topology,
                 profile: SimResult | None = None,
                 cfg: SlothConfig | None = None) -> "SlothDetector":
         self.pipeline = Sloth(graph, mesh, cfg=cfg)

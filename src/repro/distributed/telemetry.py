@@ -42,7 +42,7 @@ from ..core.failrank import FailRankParams, attribute_links, failrank
 from ..core.failures import FailSlow
 from ..core.mcg import build_mcg
 from ..core.recorder import RecorderOutput, record
-from ..core.routing import Mesh2D
+from ..core.routing import Topology, build_topology
 from ..core.simulator import SimResult
 from ..core.sketch import SketchParams
 from ..core.streaming import StreamingRecorder
@@ -52,6 +52,12 @@ from ..core.streaming import StreamingRecorder
 class PodTelemetryConfig:
     mesh_w: int = 16
     mesh_h: int = 16
+    # registry fabric key for the pod ('mesh' | 'torus' | 'systolic' |
+    # 'het:fast2slow1' | ...): the simulator and the detector both build
+    # their fabric through the topology registry from this one field, so
+    # pod telemetry honours the deployment's actual fabric instead of
+    # hard-coding a mesh in each class.
+    topology: str = "mesh"
     window_steps: int = 32          # steps per analysis window
     sketch: SketchParams = dataclasses.field(
         default_factory=lambda: SketchParams(d=2, m=1024, H=4, L=2048))
@@ -71,7 +77,7 @@ class PodSimulator:
                  collective_bytes: float, seed: int = 0,
                  host: int = 0):
         self.cfg = cfg
-        self.mesh = Mesh2D(cfg.mesh_w, cfg.mesh_h)
+        self.mesh = build_topology(cfg.topology, cfg.mesh_w, cfg.mesh_h)
         # Host identity and mesh shape are folded into the stream key
         # the same way campaign.py keys scenarios — two hosts sharing a
         # base seed must not draw identical telemetry noise.
@@ -199,7 +205,7 @@ class PodDetector:
 
     def __init__(self, cfg: PodTelemetryConfig):
         self.cfg = cfg
-        self.mesh = Mesh2D(cfg.mesh_w, cfg.mesh_h)
+        self.mesh = build_topology(cfg.topology, cfg.mesh_w, cfg.mesh_h)
         self._stream: StreamingRecorder | None = None
 
     def _verdict_from(self, rec: RecorderOutput,
@@ -296,7 +302,7 @@ class PodMitigationPolicy:
     action keys alone.
     """
     n_shards: int
-    mesh: Mesh2D | None = None
+    mesh: Topology | None = None
 
     def plan(self, verdict: PodVerdict) -> dict:
         if not verdict.flagged:

@@ -7,7 +7,7 @@ edits the deployment the way an operator would:
   excluded from the placement pool.  Link/router sites are out of scope
   for remap (compute placement cannot dodge a slow wire).
 * ``reroute`` — detour flows around flagged *links* via
-  :class:`~repro.core.routing.DetourMesh`.  When several flagged links
+  :class:`~repro.core.routing.DetourTopology`.  When several flagged links
   share one router (≥2 incident) the router itself is presumed slow and
   the policy falls back to remap for it: its core leaves the placement
   pool and *all* its links are detoured.  Core sites likewise fall back
@@ -29,7 +29,7 @@ import dataclasses
 
 from ..core.detectors import Verdict
 from ..core.mapping import MappedGraph, map_graph
-from ..core.routing import DetourMesh, Mesh2D
+from ..core.routing import DetourTopology, Topology
 from .policy import (MitigationPlan, _register_builtin_policy, flagged_sites)
 
 __all__ = ["NonePolicy", "RemapPolicy", "ReroutePolicy", "QuarantinePolicy"]
@@ -53,7 +53,7 @@ def _cap_exclusion(cores: list[int], n_cores: int) -> tuple[int, ...]:
     return tuple(cores)
 
 
-def _finish(name: str, mesh: Mesh2D, exclude: list[int],
+def _finish(name: str, mesh: Topology, exclude: list[int],
             avoid: list[int], reason: str) -> MitigationPlan:
     exclude_t = _cap_exclusion(exclude, mesh.n_cores)
     avoid_t = tuple(sorted(dict.fromkeys(int(l) for l in avoid)))
@@ -64,12 +64,12 @@ def _finish(name: str, mesh: Mesh2D, exclude: list[int],
 
 
 def _apply_edits(plan: MitigationPlan, mapped: MappedGraph) -> MappedGraph:
-    """Materialise a plan: wrap the mesh in a DetourMesh when links are
+    """Materialise a plan: wrap the fabric in a DetourTopology when links are
     avoided, re-map when cores are excluded, and leave ``mapped``
     untouched either way."""
-    mesh: Mesh2D = mapped.mesh
+    mesh: Topology = mapped.mesh
     if plan.avoid_links:
-        mesh = DetourMesh(mapped.mesh, plan.avoid_links)
+        mesh = DetourTopology(mapped.mesh, plan.avoid_links)
     if plan.exclude_cores:
         return map_graph(mapped.graph, mesh,
                          exclude_cores=plan.exclude_cores)
@@ -85,7 +85,7 @@ class NonePolicy:
     name = "none"
 
     def plan(self, verdict: Verdict, mapped: MappedGraph | None,
-             mesh: Mesh2D, cfg=None) -> MitigationPlan:
+             mesh: Topology, cfg=None) -> MitigationPlan:
         return _not_acted(self.name, "control policy")
 
     def apply(self, plan: MitigationPlan, mapped: MappedGraph,
@@ -99,7 +99,7 @@ class RemapPolicy:
     name = "remap"
 
     def plan(self, verdict: Verdict, mapped: MappedGraph | None,
-             mesh: Mesh2D, cfg=None) -> MitigationPlan:
+             mesh: Topology, cfg=None) -> MitigationPlan:
         sites = flagged_sites(verdict)
         if not sites:
             return _not_acted(self.name, "verdict not flagged")
@@ -121,7 +121,7 @@ class ReroutePolicy:
     name = "reroute"
 
     def plan(self, verdict: Verdict, mapped: MappedGraph | None,
-             mesh: Mesh2D, cfg=None) -> MitigationPlan:
+             mesh: Topology, cfg=None) -> MitigationPlan:
         sites = flagged_sites(verdict)
         if not sites:
             return _not_acted(self.name, "verdict not flagged")
@@ -162,7 +162,7 @@ class QuarantinePolicy:
     name = "quarantine"
 
     def plan(self, verdict: Verdict, mapped: MappedGraph | None,
-             mesh: Mesh2D, cfg=None) -> MitigationPlan:
+             mesh: Topology, cfg=None) -> MitigationPlan:
         sites = flagged_sites(verdict)
         if not sites:
             return _not_acted(self.name, "verdict not flagged")

@@ -23,7 +23,7 @@ from typing import Callable, Protocol, runtime_checkable
 
 from ..core.detectors import Verdict
 from ..core.mapping import MappedGraph
-from ..core.routing import Mesh2D
+from ..core.routing import Topology
 
 __all__ = [
     "MitigationPlan", "MitigationPolicy", "DEFAULT_POLICIES",
@@ -65,7 +65,7 @@ class MitigationPolicy(Protocol):
     name: str
 
     def plan(self, verdict: Verdict, mapped: MappedGraph | None,
-             mesh: Mesh2D, cfg=None) -> MitigationPlan:
+             mesh: Topology, cfg=None) -> MitigationPlan:
         ...
 
     def apply(self, plan: MitigationPlan, mapped: MappedGraph,

@@ -216,7 +216,7 @@ def test_rect_mesh_campaign_end_to_end():
                      reps=1, campaign_seed=5)
     res = run_campaign(g, workers=0, cache=DeploymentCache())
     assert all(o.mesh_w == 6 and o.mesh_h == 3 for o in res.outcomes)
-    assert ("darknet19", 6, 3) in res.probe_overheads
+    assert ("darknet19", "mesh", 6, 3) in res.probe_overheads
     assert all(c[1] == 6 and c[2] == 3 for c in res.cells)
 
 
